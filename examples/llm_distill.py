@@ -1,0 +1,25 @@
+"""AMS beyond the paper: continual distillation of a transformer student.
+
+A drifting token stream stands in for the live video; the student (any
+model-zoo architecture, reduced size) is adapted with gradient-guided masked
+Adam and its sparse deltas are streamed — demonstrating that the AMS core is
+architecture-agnostic (DESIGN.md §6).
+
+Run:  PYTHONPATH=src python examples/llm_distill.py --arch rwkv6-3b
+"""
+import argparse
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+    train.main(["--arch", args.arch, "--steps", str(args.steps),
+                "--phase-len", "10", "--log-every", "20"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Dev shakeout for the AMS simulation world (short video, all schemes)."""
+import time
+
+import numpy as np
+
+from repro.core.server import AMSConfig
+from repro.data.video import VideoConfig
+from repro.sim.runner import SCHEMES, SimConfig, run_scheme
+from repro.sim.seg_world import SegWorld, pretrain_student
+
+t0 = time.time()
+vcfg = VideoConfig(height=48, width=48, fps=4.0, duration=120.0, seed=7,
+                   drift_period=90.0)
+world = SegWorld.make(vcfg)
+pre = pretrain_student(world.seg_cfg, n_videos=3, steps=60,
+                       video_kw=dict(height=48, width=48, fps=4.0, duration=60.0))
+print(f"pretrain done {time.time()-t0:.1f}s")
+
+ams_cfg = AMSConfig(t_update=10.0, t_horizon=60.0, k_iters=8, batch_size=4,
+                    gamma=0.05, phi_target=0.04)
+sim = SimConfig(eval_stride=4)
+
+for scheme in SCHEMES:
+    t1 = time.time()
+    r = run_scheme(scheme, world, pre, ams_cfg, sim)
+    up, down = r.bandwidth_kbps(vcfg.duration)
+    print(f"{scheme:16s} mIoU={r.mean_miou:.3f} up={up:7.1f}Kbps down={down:7.1f}Kbps "
+          f"updates={r.updates} ({time.time()-t1:.1f}s)")

@@ -1,0 +1,55 @@
+"""Minimal npz pytree checkpointing (flat path keys, dtype-preserving)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_paths(tree):
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(f"{prefix}/{k}" if prefix else str(k), v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}/{i}", v)
+        else:
+            arr = np.asarray(node)
+            if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype):
+                arr = arr.astype(np.float32)  # bf16 -> fp32 on disk
+            flat[prefix] = arr
+
+    rec("", tree)
+    return flat
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten_paths(tree))
+
+
+def load(path: str, like):
+    """Restore into the structure of `like` (shapes/dtypes preserved)."""
+    data = np.load(path)
+    flat = dict(data)
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            return {k: rec(f"{prefix}/{k}" if prefix else str(k), v)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            vals = [rec(f"{prefix}/{i}", v) for i, v in enumerate(node)]
+            return type(node)(vals)
+        arr = flat[prefix]
+        return jnp.asarray(arr, dtype=node.dtype)  # restore original dtype
+
+    return rec("", like)
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(path)

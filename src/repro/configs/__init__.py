@@ -1,0 +1,54 @@
+"""Architecture config registry.
+
+Every assigned architecture has a module exporting ``full()`` (the exact
+published config) and ``smoke()`` (a reduced same-family variant: <=2 pattern
+repeats, d_model<=512, <=4 experts) used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.common import ModelConfig
+
+ARCH_IDS = (
+    "gemma2_9b",
+    "zamba2_7b",
+    "llama32_vision_90b",
+    "whisper_large_v3",
+    "gemma_2b",
+    "moonshot_v1_16b_a3b",
+    "rwkv6_3b",
+    "mixtral_8x22b",
+    "llama3_405b",
+    "llama4_maverick_400b_a17b",
+)
+
+# external spelling (--arch flag) -> module name
+ALIASES = {
+    "gemma2-9b": "gemma2_9b",
+    "zamba2-7b": "zamba2_7b",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "whisper-large-v3": "whisper_large_v3",
+    "gemma-2b": "gemma_2b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "rwkv6-3b": "rwkv6_3b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "llama3-405b": "llama3_405b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "ams-seg": "ams_seg",
+}
+
+
+def _module(name: str):
+    name = ALIASES.get(name, name)
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    cfg = _module(name).full()
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def get_smoke(name: str, **overrides) -> ModelConfig:
+    cfg = _module(name).smoke()
+    return cfg.replace(**overrides) if overrides else cfg

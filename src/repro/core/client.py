@@ -1,0 +1,31 @@
+"""Edge client: local inference + double-buffered model swap (§3, "Edge
+device"): updates are applied to an inactive copy and atomically swapped so
+inference is never disrupted."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core.delta import ModelDelta, apply_delta
+
+
+class EdgeClient:
+    def __init__(self, predict_fn: Callable, params0):
+        self._predict = predict_fn
+        self.active = params0
+        self.inactive = jax.tree.map(lambda x: x, params0)
+        self.updates_applied = 0
+
+    def apply_update(self, delta: ModelDelta) -> None:
+        """Apply to the inactive copy, then swap (never blocks inference)."""
+        self.inactive = apply_delta(self.inactive, delta)
+        self.active, self.inactive = self.inactive, self.active
+        # fold the same update into the now-inactive copy so both replicas
+        # converge (the paper keeps two full copies in memory)
+        self.inactive = jax.tree.map(lambda a: a, self.active)
+        self.updates_applied += 1
+
+    def infer(self, frame):
+        return self._predict(self.active, frame)

@@ -1,0 +1,76 @@
+"""Sparse model-update codec (§3.1.2, downlink payload).
+
+A ModelDelta carries, per leaf: the new values of masked coordinates as
+fp16, plus one global gzip'd bit-vector marking their positions — exactly
+the paper's wire format ("it sends a bit-vector identifying the location of
+the parameters... compressed [with] gzip").
+"""
+from __future__ import annotations
+
+import gzip
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class ModelDelta:
+    values: np.ndarray  # concatenated masked values (value_dtype)
+    packed_mask: bytes  # gzip'd packed bit-vector over the flat param space
+    n_total: int  # total parameter count (for unpacking)
+    value_dtype: str = "float16"
+
+    # --- wire accounting -------------------------------------------------
+    @property
+    def value_bytes(self) -> int:
+        return self.values.nbytes
+
+    @property
+    def mask_bytes(self) -> int:
+        return len(self.packed_mask)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.value_bytes + self.mask_bytes
+
+
+def _flatten(tree) -> np.ndarray:
+    leaves = [np.asarray(l).reshape(-1) for l in jax.tree.leaves(tree)]
+    return np.concatenate(leaves) if leaves else np.zeros((0,))
+
+
+def encode_delta(params_new, mask, value_dtype="float16") -> ModelDelta:
+    flat_p = _flatten(params_new)
+    flat_m = _flatten(mask).astype(bool)
+    values = flat_p[flat_m].astype(value_dtype)
+    packed = gzip.compress(np.packbits(flat_m).tobytes(), compresslevel=6)
+    return ModelDelta(values=values, packed_mask=packed, n_total=flat_p.size,
+                      value_dtype=value_dtype)
+
+
+def apply_delta(params_old, delta: ModelDelta):
+    """Edge-side: overwrite masked coordinates with streamed values."""
+    flat_m = np.unpackbits(
+        np.frombuffer(gzip.decompress(delta.packed_mask), np.uint8)
+    )[: delta.n_total].astype(bool)
+    leaves, treedef = jax.tree.flatten(params_old)
+    out, off_p, off_v = [], 0, 0
+    vals = delta.values
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape))
+        m = flat_m[off_p : off_p + n]
+        k = int(m.sum())
+        flat = np.asarray(leaf).reshape(-1).copy()
+        flat[m] = vals[off_v : off_v + k].astype(flat.dtype)
+        out.append(jnp.asarray(flat.reshape(leaf.shape), dtype=leaf.dtype))
+        off_p += n
+        off_v += k
+    assert off_p == delta.n_total and off_v == vals.size
+    return jax.tree.unflatten(treedef, out)
+
+
+def full_model_bytes(params, value_dtype="float16") -> int:
+    """Wire cost of a naive full-model update (the paper's 3.2 Mbps case)."""
+    return _flatten(params).astype(value_dtype).nbytes

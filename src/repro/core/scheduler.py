@@ -1,0 +1,45 @@
+"""Multi-session server scheduling (Appendix E).
+
+Round-robin over sessions, one inference+training step per turn, one session
+on the GPU at a time (the paper's strategy — minimizes context switching).
+The GPU is modeled by a busy-until clock with per-operation costs calibrated
+to the paper's V100 numbers (teacher inference 200-300 ms/frame; K=20 student
+iterations per phase)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class GPUCostModel:
+    teacher_infer_s: float = 0.25  # per frame (paper: 200-300 ms on V100)
+    train_iter_s: float = 0.05  # per student minibatch iteration
+    @property
+    def phase_s(self) -> float:  # K=20 iterations
+        return 20 * self.train_iter_s
+
+
+@dataclass
+class RoundRobinScheduler:
+    cost: GPUCostModel = field(default_factory=GPUCostModel)
+    gpu_free_at: float = 0.0
+    turn: int = 0
+    # telemetry
+    busy_s: float = 0.0
+    served: int = 0
+    deferred: int = 0
+
+    def try_acquire(self, t_now: float, n_frames: int, k_iters: int) -> bool:
+        """One session's turn: label n_frames + run a training phase.
+        Returns False (deferred) if the GPU is still busy."""
+        if t_now < self.gpu_free_at:
+            self.deferred += 1
+            return False
+        dur = n_frames * self.cost.teacher_infer_s + k_iters * self.cost.train_iter_s
+        self.gpu_free_at = max(self.gpu_free_at, t_now) + dur
+        self.busy_s += dur
+        self.served += 1
+        return True
+
+    def utilization(self, t_now: float) -> float:
+        return self.busy_s / max(t_now, 1e-9)

@@ -1,0 +1,26 @@
+"""jit'd wrapper around the Pallas flash-attention kernel, in the model's
+native (B, S, KV, G, hd) layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_4d
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "block_q", "block_k", "interpret")
+)
+def flash_attention_pallas(q, k, v, *, causal=True, window=0, softcap=0.0,
+                           block_q=128, block_k=128, interpret=True):
+    """q: (B,Sq,KV,G,hd); k,v: (B,Skv,KV,hd) — same layout as
+    models/attention.flash_attention. Returns (B,Sq,KV,G,hd)."""
+    B, Sq, KV, G, hd = q.shape
+    q4 = q.transpose(0, 2, 3, 1, 4).reshape(B, KV * G, Sq, hd)
+    k4 = k.transpose(0, 2, 1, 3)
+    v4 = v.transpose(0, 2, 1, 3)
+    o = flash_attention_4d(q4, k4, v4, causal=causal, window=window, softcap=softcap,
+                           block_q=block_q, block_k=block_k, interpret=interpret)
+    return o.reshape(B, KV, G, Sq, hd).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,1 @@
+from repro.kernels.masked_adam.ops import masked_adam_leaf  # noqa: F401

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused masked-Adam inner update (Algorithm 2, lines 8-13).
+
+On the server this op touches every parameter 4x per iteration (p, m, v plus
+the emitted update u) — at 0 FLOP/byte it is purely HBM-bandwidth bound, so
+the win is one HBM->VMEM pass with all arithmetic fused, instead of the
+~10 separate elementwise HLO ops XLA emits for the unfused tree_map version.
+
+Tiling: parameters are flattened and reshaped to (rows, 128) lanes; each grid
+step processes a (BLOCK_ROWS, 128) tile resident in VMEM (6 input + 4 output
+tiles ~= 2.6 MB at BLOCK_ROWS=512 — comfortably under the ~16 MB VMEM/core).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 512
+
+
+def _kernel(p_ref, g_ref, m_ref, v_ref, b_ref, s_ref,
+            po_ref, mo_ref, vo_ref, uo_ref, *, b1, b2, eps):
+    g = g_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...].astype(jnp.float32) + (1.0 - b1) * g
+    v = b2 * v_ref[...].astype(jnp.float32) + (1.0 - b2) * g * g
+    bc = s_ref[0, 0]  # lr * sqrt(1-b2^i)/(1-b1^i), precomputed on host
+    u = bc * m / jnp.sqrt(v + eps)
+    p = p_ref[...].astype(jnp.float32) - u * b_ref[...].astype(jnp.float32)
+    po_ref[...] = p.astype(po_ref.dtype)
+    mo_ref[...] = m.astype(mo_ref.dtype)
+    vo_ref[...] = v.astype(vo_ref.dtype)
+    uo_ref[...] = u.astype(uo_ref.dtype)
+
+
+def masked_adam_2d(p, g, m, v, b, bc, *, b1: float, b2: float, eps: float,
+                   block_rows: int = BLOCK_ROWS, interpret: bool = True):
+    """Core 2-D tiled call. All tensors (R, 128); bc: (1,1) f32."""
+    R = p.shape[0]
+    br = min(block_rows, R)
+    while R % br:
+        br -= 1
+    grid = (R // br,)
+    tile = pl.BlockSpec((br, LANES), lambda i: (i, 0))
+    scal = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out_shapes = (
+        jax.ShapeDtypeStruct(p.shape, p.dtype),
+        jax.ShapeDtypeStruct(m.shape, m.dtype),
+        jax.ShapeDtypeStruct(v.shape, v.dtype),
+        jax.ShapeDtypeStruct(p.shape, jnp.float32),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, b1=b1, b2=b2, eps=eps),
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, tile, scal],
+        out_specs=(tile, tile, tile, tile),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(p, g, m, v, b, bc)

@@ -1,0 +1,38 @@
+"""jit'd wrapper: apply the fused masked-Adam kernel to one leaf of any
+shape/dtype (pad + reshape to lane-aligned 2-D, undo afterwards)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_adam.masked_adam import LANES, masked_adam_2d
+
+
+def _to_2d(x, n_pad):
+    flat = x.reshape(-1)
+    if n_pad:
+        flat = jnp.pad(flat, (0, n_pad))
+    return flat.reshape(-1, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "interpret"))
+def masked_adam_leaf(p, g, m, v, b, bc, *, b1=0.9, b2=0.999, eps=1e-8,
+                     interpret=True):
+    """Fused Algorithm-2 inner update for a single parameter leaf.
+    bc is the scalar lr * sqrt(1-b2^i)/(1-b1^i). Returns (p', m', v', u)."""
+    shape = p.shape
+    n = p.size
+    n_pad = (-n) % LANES
+    args = [_to_2d(a, n_pad) for a in (p, g, m, v)]
+    bmask = _to_2d(b.astype(jnp.float32), n_pad)
+    bc2 = jnp.asarray(bc, jnp.float32).reshape(1, 1)
+    po, mo, vo, uo = masked_adam_2d(*args, bmask, bc2, b1=b1, b2=b2, eps=eps,
+                                    interpret=interpret)
+
+    def _back(x, dtype=None):
+        flat = x.reshape(-1)[:n]
+        return flat.reshape(shape) if dtype is None else flat.reshape(shape).astype(dtype)
+
+    return _back(po), _back(mo), _back(vo), _back(uo)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused masked-Adam kernel (identical math to
+core/masked_adam.py's per-leaf update)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_adam_ref(p, g, m, v, b, bc, *, b1: float, b2: float, eps: float):
+    g32 = g.astype(jnp.float32)
+    m_new = b1 * m.astype(jnp.float32) + (1.0 - b1) * g32
+    v_new = b2 * v.astype(jnp.float32) + (1.0 - b2) * jnp.square(g32)
+    u = bc.reshape(()) * m_new / jnp.sqrt(v_new + eps)
+    p_new = (p.astype(jnp.float32) - u * b.astype(jnp.float32)).astype(p.dtype)
+    return p_new, m_new.astype(m.dtype), v_new.astype(v.dtype), u

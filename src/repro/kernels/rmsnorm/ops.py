@@ -1,0 +1,16 @@
+"""jit'd wrapper: RMSNorm kernel over arbitrary leading dims."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.rmsnorm import rms_norm_2d
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rms_norm_pallas(x, w, *, eps: float = 1e-6, interpret: bool = True):
+    """x: (..., d); w: (d,)."""
+    shape = x.shape
+    out = rms_norm_2d(x.reshape(-1, shape[-1]), w, eps=eps, interpret=interpret)
+    return out.reshape(shape)

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle (identical to models/layers.rms_norm)."""
+from repro.models.layers import rms_norm as rms_norm_ref  # noqa: F401

@@ -1,0 +1,54 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run path.
+
+Weak-type-correct, shardable, zero device allocation."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+INPUT_SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode_long", seq_len=524288, global_batch=1),
+}
+
+
+def batch_pspec(rules) -> P:
+    return P(rules.get("batch"))
+
+
+def train_inputs(cfg: ModelConfig, batch: int, seq: int):
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.num_xattn_tokens:
+        specs["memory"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_xattn_tokens, cfg.d_model), cfg.cdtype
+        )
+    return specs
+
+
+def train_input_pspecs(cfg: ModelConfig, rules) -> dict:
+    b = rules.get("batch")
+    out = {"tokens": P(b, None), "labels": P(b, None)}
+    if cfg.num_xattn_tokens:
+        out["memory"] = P(b, None, None)
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, batch: int):
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def decode_input_pspecs(cfg: ModelConfig, rules) -> dict:
+    return {"tokens": P(rules.get("batch"), None), "pos": P()}

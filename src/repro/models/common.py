@@ -1,0 +1,280 @@
+"""Model configuration and parameter-metadata machinery.
+
+A single ``ParamMeta`` tree is the source of truth for every architecture:
+  * ``init_params``      materializes real weights (smoke tests, repro world)
+  * ``abstract_params``  returns ShapeDtypeStructs (dry-run, no allocation)
+  * ``partition_specs``  derives jax.sharding.PartitionSpec per leaf from the
+                         logical axis names + a rules table.
+
+Logical axis vocabulary (see DESIGN.md §4):
+  "layers"   scan dimension over repeated block groups  (never sharded)
+  "embed"    d_model                                    (FSDP -> "data")
+  "heads"    fused attention head dim (H*hd)            (TP   -> "model")
+  "ff"       mlp hidden                                 (TP   -> "model")
+  "vocab"    vocabulary                                 (TP   -> "model")
+  "experts"  MoE expert dim                             (EP   -> "model")
+  "unsharded" anything replicated (norm scales, biases, conv taps, ...)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One config type for every architecture family (see configs/)."""
+
+    name: str = "model"
+    family: str = "dense"  # dense|moe|ssm|hybrid|vlm|audio|seg
+    source: str = ""  # citation (arXiv id / hf model card)
+
+    # trunk
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+
+    # block pattern, repeated num_layers/len(pattern) times (scan groups).
+    # Block kinds: attn | attn_local | xattn | attn_xattn | moe | moe_local
+    #              | mamba | rwkv
+    pattern: tuple = ("attn",)
+
+    # attention details
+    window_size: int = 0  # for *_local blocks
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    post_norm: bool = False  # gemma2-style post-block norms
+    rope_theta: float = 10_000.0
+    pos: str = "rope"  # rope|learned|none
+    max_position: int = 1 << 20  # for learned positions only
+
+    # mlp
+    mlp_act: str = "swiglu"  # swiglu|geglu|gelu
+    norm: str = "rms"  # rms|layer
+    norm_plus_one: bool = False  # gemma-style (1 + w) RMSNorm scale
+    embed_scale: bool = False  # gemma sqrt(d_model) embedding scale
+    tie_embeddings: bool = True
+
+    # moe
+    num_experts: int = 0
+    experts_per_token: int = 0
+    expert_d_ff: int = 0
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+
+    # hybrid (zamba2): a single *shared* attention block applied at the start
+    # of every scan group (weights reused across groups).
+    shared_attn: bool = False
+
+    # cross-attention inputs (vlm patches / audio frames)
+    num_xattn_tokens: int = 0
+
+    # encoder (whisper)
+    encoder_layers: int = 0
+
+    # numerics / runtime
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: bool = False
+    use_pallas: bool = False
+    # unroll the layer scan (cost-counting dry-run variants; HLO cost
+    # analysis counts while-loop bodies once — see roofline/analytic.py)
+    scan_unroll: bool = False
+    # chunked-flash tile sizes for the jnp attention path
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 512
+    # mesh axes carrying the batch dim of activations; when set, the stack
+    # pins x to P(act_sharding, None, None) at block boundaries (keeps GSPMD
+    # from inventing pathological activation shardings)
+    act_sharding: tuple | None = None
+    # §Perf hillclimb A: windowed decode uses a ring cache of size
+    # min(seq, window). Off by default = the naive baseline measured in
+    # EXPERIMENTS.md.
+    decode_window_slicing: bool = False
+    # §Perf hillclimb B ("moe_shard"): explicit expert-parallel layout for
+    # the MoE dispatch buffers (experts over ep_axis, capacity over data).
+    moe_ep_axis: str | None = None
+    moe_cap_axes: tuple | None = None
+    # runtime sliding-window override applied to *full* attention blocks
+    # (long_500k policy for dense archs, DESIGN.md §6); 0 = no override.
+    attn_window_override: int = 0
+
+    # ----- derived -----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def num_groups(self) -> int:
+        assert self.num_layers % len(self.pattern) == 0, (
+            f"{self.name}: num_layers={self.num_layers} not divisible by "
+            f"pattern length {len(self.pattern)}"
+        )
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Param metadata
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamMeta:
+    shape: tuple
+    axes: tuple  # logical axis names, len == len(shape)
+    init: str = "fan_in"  # fan_in|zeros|ones|normal|embed
+    init_scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_init(meta: ParamMeta, key, dtype):
+    if meta.init == "zeros":
+        return jnp.zeros(meta.shape, dtype)
+    if meta.init == "ones":
+        return jnp.ones(meta.shape, dtype)
+    if meta.init == "normal":
+        return (meta.init_scale * jax.random.normal(key, meta.shape)).astype(dtype)
+    if meta.init == "embed":
+        return (jax.random.normal(key, meta.shape)).astype(dtype)
+    if meta.init == "fan_in":
+        # fan-in is the second-to-last axis by convention (matmul lhs dim);
+        # for 1-D params fall back to the only axis.
+        fan_in = meta.shape[-2] if len(meta.shape) >= 2 else meta.shape[0]
+        scale = meta.init_scale / math.sqrt(max(fan_in, 1))
+        return (scale * jax.random.normal(key, meta.shape)).astype(dtype)
+    raise ValueError(f"unknown init {meta.init}")
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def tree_map_meta(fn: Callable[[ParamMeta], Any], metas):
+    return jax.tree.map(fn, metas, is_leaf=is_meta)
+
+
+def init_params(metas, rng, dtype) -> Any:
+    """Materialize real parameters from a ParamMeta tree."""
+    leaves, treedef = jax.tree.flatten(metas, is_leaf=is_meta)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_leaf_init(m, k, dtype) for m, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(metas, dtype) -> Any:
+    """ShapeDtypeStruct stand-ins: dry-run path, zero allocation."""
+    return tree_map_meta(lambda m: jax.ShapeDtypeStruct(m.shape, dtype), metas)
+
+
+# Default tensor-parallel rules; fsdp=True additionally shards the embed
+# (d_model) axis of weight matrices over the data axis (ZeRO-3 semantics --
+# XLA inserts per-layer all-gathers inside the scan).
+def sharding_rules(*, fsdp: bool, data_axis="data", model_axis="model") -> dict:
+    return {
+        "layers": None,
+        "embed": data_axis if fsdp else None,
+        "heads": model_axis,
+        "kv_heads": model_axis,
+        "qgroups": None,
+        "ff": model_axis,
+        "vocab": model_axis,
+        "experts": model_axis,
+        "expert_embed": data_axis if fsdp else None,
+        "expert_ff": model_axis,
+        "unsharded": None,
+        # activation/cache logical axes (used by launch/shardings.py)
+        "batch": data_axis,
+        "seq": None,
+        "cache_seq": None,
+    }
+
+
+def meta_pspec(meta: ParamMeta, rules: dict) -> P:
+    """Map logical axes -> mesh axes; a mesh axis may appear only once, the
+    first logical axis wins (e.g. MoE (experts, embed, ff): experts->model,
+    then ff must stay unsharded). Tuple rules keep their non-conflicting
+    components (partial FSDP+TP sharding)."""
+    used = set()
+    out = []
+    for ax in meta.axes:
+        mesh_ax = rules.get(ax)
+        parts = (
+            () if mesh_ax is None else (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+        )
+        parts = tuple(a for a in parts if a not in used)
+        if not parts:
+            out.append(None)
+        else:
+            used.update(parts)
+            out.append(parts[0] if len(parts) == 1 else parts)
+    return P(*out)
+
+
+def partition_specs(metas, rules: dict):
+    return tree_map_meta(lambda m: meta_pspec(m, rules), metas)
+
+
+def param_count(metas) -> int:
+    leaves = jax.tree.leaves(metas, is_leaf=is_meta)
+    return sum(math.prod(m.shape) for m in leaves)
+
+
+def param_bytes(metas, dtype) -> int:
+    return param_count(metas) * jnp.dtype(dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Shared building blocks for meta trees
+# ---------------------------------------------------------------------------
+
+
+def norm_meta(d: int) -> ParamMeta:
+    return ParamMeta((d,), ("unsharded",), init="zeros")  # rms (1+w) style uses zeros
+    # NOTE: plain rms/layer norm reads this as scale offset; see layers.apply_norm
+
+
+def dense_meta(d_in: int, d_out: int, ax_in: str, ax_out: str, scale=1.0) -> ParamMeta:
+    return ParamMeta((d_in, d_out), (ax_in, ax_out), init="fan_in", init_scale=scale)
+
+
+def stack_group(metas, n_groups: int):
+    """Prepend a scanned 'layers' axis to every leaf of a block meta tree."""
+    return tree_map_meta(
+        lambda m: ParamMeta((n_groups, *m.shape), ("layers", *m.axes), m.init, m.init_scale),
+        metas,
+    )

@@ -1,0 +1,138 @@
+"""Primitive layers: norms, rotary embeddings, MLPs, embedding/unembedding.
+
+Convention: every norm stores its scale as an *offset* w with effective scale
+(1 + w) (zeros-init). This matches Gemma's (1+w) RMSNorm exactly and is
+numerically identical to ones-init scale for the others.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ParamMeta, dense_meta, norm_meta
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x, w, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, x, w):
+    return rms_norm(x, w) if cfg.norm == "rms" else layer_norm(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, seq, *head_dims, head_dim); positions: (B, seq).
+    Broadcasts over any number of intermediate head dims (no reshape — keeps
+    GSPMD shardings intact)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, seq, hd/2)
+    expand = (slice(None), slice(None)) + (None,) * (x.ndim - 3) + (slice(None),)
+    cos = jnp.cos(ang)[expand]  # (B, seq, 1..., hd/2)
+    sin = jnp.sin(ang)[expand]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Softcap
+# ---------------------------------------------------------------------------
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_metas(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, (d_ff or cfg.d_ff)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {
+            "wg": dense_meta(d, ff, "embed", "ff"),
+            "wu": dense_meta(d, ff, "embed", "ff"),
+            "wd": dense_meta(ff, d, "ff", "embed"),
+        }
+    return {  # plain gelu (whisper)
+        "wu": dense_meta(d, ff, "embed", "ff"),
+        "wd": dense_meta(ff, d, "ff", "embed"),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p: dict, x):
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        g = x @ p["wg"]
+        act = jax.nn.silu(g) if cfg.mlp_act == "swiglu" else jax.nn.gelu(g, approximate=True)
+        return (act * (x @ p["wu"])) @ p["wd"]
+    return jax.nn.gelu(x @ p["wu"], approximate=True) @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (tied)
+# ---------------------------------------------------------------------------
+
+
+def sinusoidal_pos(positions, d_model: int, dtype=jnp.float32):
+    """Classic transformer sinusoidal encoding; positions: (..., seq)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def embed_metas(cfg: ModelConfig) -> dict:
+    m = {"tok": ParamMeta((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), init="embed")}
+    if cfg.pos == "learned":
+        m["pos"] = ParamMeta((cfg.max_position, cfg.d_model), ("unsharded", "embed"), init="embed")
+    return m
+
+
+def embed_apply(cfg: ModelConfig, p: dict, tokens, positions=None):
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.cdtype)
+    if cfg.pos == "learned":
+        assert positions is not None
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(cfg.cdtype)
+    elif cfg.pos == "sinusoidal":
+        assert positions is not None
+        x = x + sinusoidal_pos(positions, cfg.d_model, cfg.cdtype)
+    return x
+
+
+def unembed_apply(cfg: ModelConfig, p: dict, x):
+    logits = x @ p["tok"].T.astype(cfg.cdtype)
+    return softcap(logits, cfg.final_logit_softcap)

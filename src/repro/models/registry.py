@@ -1,0 +1,73 @@
+"""Model facade: bundles config + param machinery + step functions."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.common import (
+    ModelConfig,
+    ParamMeta,
+    abstract_params,
+    init_params,
+    param_count,
+    partition_specs,
+)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # --- params ---
+    def metas(self) -> dict:
+        return tfm.model_metas(self.cfg)
+
+    def init(self, rng):
+        return init_params(self.metas(), rng, self.cfg.pdtype)
+
+    def abstract(self):
+        return abstract_params(self.metas(), self.cfg.pdtype)
+
+    def pspecs(self, rules: dict):
+        return partition_specs(self.metas(), rules)
+
+    def num_params(self) -> int:
+        return param_count(self.metas())
+
+    # --- steps ---
+    def forward(self, params, tokens, memory=None):
+        return tfm.forward(self.cfg, params, tokens, memory)
+
+    def loss(self, params, batch):
+        return tfm.distill_loss(self.cfg, params, batch)
+
+    def prefill(self, params, tokens, cache_len, memory=None):
+        return tfm.prefill(self.cfg, params, tokens, cache_len, memory)
+
+    def decode_step(self, params, caches, tokens, pos):
+        return tfm.decode_step(self.cfg, params, caches, tokens, pos)
+
+    # --- caches ---
+    def cache_metas(self, batch, seq, mem_len=0):
+        return tfm.cache_metas(self.cfg, batch, seq, mem_len)
+
+    def init_cache(self, batch, seq, mem_len=0, dtype=None):
+        return tfm.init_cache(self.cfg, batch, seq, mem_len, dtype)
+
+    def abstract_cache(self, batch, seq, mem_len=0, dtype=None):
+        dtype = dtype or self.cfg.cdtype
+        return jax.tree_util.tree_map_with_path(
+            lambda path, m: jax.ShapeDtypeStruct(m.shape, tfm.cache_dtype(path[-1].key, dtype)),
+            self.cache_metas(batch, seq, mem_len),
+            is_leaf=lambda v: isinstance(v, ParamMeta),
+        )
+
+    def cache_pspecs(self, batch, seq, rules, mem_len=0):
+        return partition_specs(self.cache_metas(batch, seq, mem_len), rules)
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

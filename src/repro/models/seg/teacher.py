@@ -1,0 +1,72 @@
+"""Learned teacher: a wider same-family convnet trained on ground truth.
+
+Used by the teacher-fidelity ablation (benchmarks/ablation_teacher.py): AMS's
+measured quantity is student-vs-teacher mIoU, so swapping the oracle teacher
+(DESIGN.md §5) for a *learned* model must not change the §Repro conclusions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.core.masked_adam import adam_update, init_state
+from repro.data.video import SyntheticVideo
+from repro.models.seg.student import SegConfig, make_student, seg_loss, seg_predict
+
+
+def teacher_config(n_classes: int) -> SegConfig:
+    return SegConfig(name="seg-teacher", n_classes=n_classes, width=3.0,
+                     blocks=((3, 24, 2), (3, 24, 1), (3, 32, 2), (3, 32, 1),
+                             (3, 48, 1)))
+
+
+@dataclass
+class ModelTeacher:
+    """Same interface as OracleTeacher: label(frame_index) -> (H, W) int."""
+
+    video: SyntheticVideo
+    cfg: SegConfig
+    params: object
+
+    def __post_init__(self):
+        cfg = self.cfg
+
+        @jax.jit
+        def predict(params, frames):
+            return seg_predict(cfg, params, frames)
+
+        self._predict = predict
+        self._cache: dict = {}
+
+    def label(self, idx: int) -> np.ndarray:
+        if idx not in self._cache:
+            img, _ = self.video.frame(idx)
+            self._cache[idx] = np.asarray(self._predict(self.params, img[None])[0])
+            if len(self._cache) > 512:
+                self._cache.pop(next(iter(self._cache)))
+        return self._cache[idx]
+
+
+def train_teacher(video: SyntheticVideo, n_classes: int, steps: int = 400,
+                  batch: int = 8, lr: float = 2e-3, seed: int = 7) -> ModelTeacher:
+    """Fit the wide teacher on the video's ground truth (the stand-in for the
+    paper's Cityscapes-pretrained Xception65)."""
+    cfg = teacher_config(n_classes)
+    params = make_student(cfg, jax.random.PRNGKey(seed))
+    opt = init_state(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, opt, frames, labels):
+        loss, grads = jax.value_and_grad(lambda p: seg_loss(cfg, p, frames, labels))(params)
+        params, opt, _ = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    for _ in range(steps):
+        idxs = rng.integers(0, video.cfg.n_frames, size=batch)
+        frames = np.stack([video.frame(int(i))[0] for i in idxs])
+        labels = np.stack([video.frame(int(i))[1] for i in idxs])
+        params, opt, loss = step(params, opt, frames, labels)
+    return ModelTeacher(video=video, cfg=cfg, params=params)

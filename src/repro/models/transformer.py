@@ -1,0 +1,517 @@
+"""Generic decoder stack: block dispatch + scan-over-groups assembly.
+
+Every architecture is a repeated `pattern` of block kinds:
+
+    attn        full causal self-attention + MLP
+    attn_local  sliding-window causal self-attention + MLP
+    attn_nc     non-causal self-attention + MLP (whisper encoder)
+    xattn       cross-attention (onto stub frontend memory) + MLP
+    attn_xattn  self-attn + cross-attn + MLP in one block (whisper decoder)
+    moe         full causal self-attention + MoE
+    moe_local   sliding-window self-attention + MoE (mixtral)
+    mamba       Mamba2 SSD block (no separate MLP)
+    rwkv        RWKV6 time-mix + channel-mix
+
+Parameters for each pattern position are stacked over groups and the stack is
+consumed by one `lax.scan` (optionally remat'd), keeping HLO size independent
+of depth — essential for 126-layer models compiled on a 512-device mesh.
+
+`cfg.shared_attn` (zamba2): one *shared* attention block (weights outside the
+scan) is applied at the start of every group; its KV caches are per-group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.common import ModelConfig, ParamMeta, stack_group
+from repro.models.layers import (
+    apply_norm,
+    embed_apply,
+    embed_metas,
+    mlp_apply,
+    mlp_metas,
+    norm_meta,
+    unembed_apply,
+)
+from repro.models.ssm import mamba2, rwkv6
+
+ATTN_KINDS = ("attn", "attn_local", "attn_nc", "moe", "moe_local")
+
+
+# ---------------------------------------------------------------------------
+# Block metas
+# ---------------------------------------------------------------------------
+
+
+def block_metas(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    if kind in ("attn", "attn_local", "attn_nc"):
+        m = {"ln1": norm_meta(d), "attn": attn.attn_metas(cfg), "ln2": norm_meta(d),
+             "mlp": mlp_metas(cfg)}
+        if cfg.post_norm:
+            m["ln1_post"] = norm_meta(d)
+            m["ln2_post"] = norm_meta(d)
+        return m
+    if kind in ("moe", "moe_local"):
+        m = {"ln1": norm_meta(d), "attn": attn.attn_metas(cfg), "ln2": norm_meta(d),
+             "moe": moe_mod.moe_metas(cfg)}
+        if cfg.post_norm:
+            m["ln1_post"] = norm_meta(d)
+            m["ln2_post"] = norm_meta(d)
+        return m
+    if kind == "xattn":
+        return {"ln1": norm_meta(d), "xattn": attn.attn_metas(cfg),
+                "ln2": norm_meta(d), "mlp": mlp_metas(cfg),
+                "gate": ParamMeta((1,), ("unsharded",), init="zeros")}
+    if kind == "attn_xattn":
+        return {"ln1": norm_meta(d), "attn": attn.attn_metas(cfg),
+                "lnx": norm_meta(d), "xattn": attn.attn_metas(cfg),
+                "ln2": norm_meta(d), "mlp": mlp_metas(cfg)}
+    if kind == "mamba":
+        return {"ln1": norm_meta(d), "mamba": mamba2.mamba2_metas(cfg)}
+    if kind == "rwkv":
+        return {"ln1": norm_meta(d), "ln2": norm_meta(d), "rwkv": rwkv6.rwkv6_metas(cfg)}
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def model_metas(cfg: ModelConfig) -> dict:
+    groups = {
+        f"b{i}": stack_group(block_metas(cfg, kind), cfg.num_groups)
+        for i, kind in enumerate(cfg.pattern)
+    }
+    m = {"embed": embed_metas(cfg), "groups": groups, "final_norm": norm_meta(cfg.d_model)}
+    if cfg.shared_attn:
+        m["shared_attn"] = {
+            "ln1": norm_meta(cfg.d_model),
+            "attn": attn.attn_metas(cfg),
+            "ln2": norm_meta(cfg.d_model),
+            "mlp": mlp_metas(cfg),
+        }
+    if cfg.encoder_layers:
+        m["encoder"] = {
+            "groups": {
+                "b0": stack_group(block_metas(cfg, "attn_nc"), cfg.encoder_layers)
+            },
+            "final_norm": norm_meta(cfg.d_model),
+        }
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Block apply (full sequence / training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _window_for(cfg: ModelConfig, kind: str) -> int:
+    return cfg.window_size if kind in ("attn_local", "moe_local") else 0
+
+
+def _attn_sub(cfg, p, x, kind, positions, want_cache):
+    h = apply_norm(cfg, x, p["ln1"])
+    causal = kind != "attn_nc"
+    out, kv = attn.self_attention(
+        cfg, p["attn"], h, window=_window_for(cfg, kind), positions=positions, causal=causal
+    )
+    if cfg.post_norm:
+        out = apply_norm(cfg, out, p["ln1_post"])
+    cache = {"k": kv[0], "v": kv[1]} if want_cache else None
+    return x + out, cache
+
+
+def block_apply(cfg: ModelConfig, kind: str, p: dict, x, *, positions, memory=None,
+                want_cache: bool = False):
+    """Returns (x, aux_loss, cache_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_local", "attn_nc"):
+        x, cache = _attn_sub(cfg, p, x, kind, positions, want_cache)
+        h = apply_norm(cfg, x, p["ln2"])
+        out = mlp_apply(cfg, p["mlp"], h)
+        if cfg.post_norm:
+            out = apply_norm(cfg, out, p["ln2_post"])
+        return x + out, aux, cache
+    if kind in ("moe", "moe_local"):
+        x, cache = _attn_sub(cfg, p, x, kind, positions, want_cache)
+        h = apply_norm(cfg, x, p["ln2"])
+        out, aux = moe_mod.moe_apply(cfg, p["moe"], h)
+        if cfg.post_norm:
+            out = apply_norm(cfg, out, p["ln2_post"])
+        return x + out, aux, cache
+    if kind == "xattn":
+        h = apply_norm(cfg, x, p["ln1"])
+        out = attn.cross_attention(cfg, p["xattn"], h, memory)
+        x = x + jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype) * out
+        h = apply_norm(cfg, x, p["ln2"])
+        x = x + mlp_apply(cfg, p["mlp"], h)
+        cache = None
+        if want_cache:
+            xc = attn.precompute_cross_cache(cfg, p["xattn"], memory)
+            cache = {"xk": xc["k"], "xv": xc["v"]}
+        return x, aux, cache
+    if kind == "attn_xattn":
+        h = apply_norm(cfg, x, p["ln1"])
+        out, kv = attn.self_attention(cfg, p["attn"], h, window=0, positions=positions)
+        x = x + out
+        h = apply_norm(cfg, x, p["lnx"])
+        x = x + attn.cross_attention(cfg, p["xattn"], h, memory)
+        h = apply_norm(cfg, x, p["ln2"])
+        x = x + mlp_apply(cfg, p["mlp"], h)
+        cache = None
+        if want_cache:
+            xc = attn.precompute_cross_cache(cfg, p["xattn"], memory)
+            cache = {"k": kv[0], "v": kv[1], "xk": xc["k"], "xv": xc["v"]}
+        return x, aux, cache
+    if kind == "mamba":
+        h = apply_norm(cfg, x, p["ln1"])
+        if want_cache:
+            out, st = mamba2.mamba2_apply(cfg, p["mamba"], h, want_state=True)
+            return x + out, aux, st
+        return x + mamba2.mamba2_apply(cfg, p["mamba"], h), aux, None
+    if kind == "rwkv":
+        h1 = apply_norm(cfg, x, p["ln1"])
+        if want_cache:
+            out, wkv = rwkv6.rwkv6_time_mix(cfg, p["rwkv"]["tm"], h1, want_state=True)
+        else:
+            out, wkv = rwkv6.rwkv6_time_mix(cfg, p["rwkv"]["tm"], h1), None
+        x = x + out
+        h2 = apply_norm(cfg, x, p["ln2"])
+        x = x + rwkv6.rwkv6_channel_mix(cfg, p["rwkv"]["cm"], h2)
+        cache = (
+            {"wkv": wkv, "tm_last": h1[:, -1], "cm_last": h2[:, -1]} if want_cache else None
+        )
+        return x, aux, cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Full forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _constrain(cfg: ModelConfig, x):
+    """Pin activation sharding (batch over act_sharding axes) if configured."""
+    if cfg.act_sharding is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(tuple(cfg.act_sharding) or None, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _shared_attn_apply(cfg, sp, x, positions):
+    h = apply_norm(cfg, x, sp["ln1"])
+    out, _ = attn.self_attention(cfg, sp["attn"], h, window=cfg.window_size, positions=positions)
+    x = x + out
+    h = apply_norm(cfg, x, sp["ln2"])
+    return x + mlp_apply(cfg, sp["mlp"], h)
+
+
+def _stack_forward(cfg: ModelConfig, params: dict, x, positions, memory=None):
+    """Decoder trunk (no embed/unembed). Returns (x, total_aux)."""
+    shared = params.get("shared_attn")
+
+    def group_body(carry, gp):
+        h = _constrain(cfg, carry)
+        aux = jnp.zeros((), jnp.float32)
+        if shared is not None:
+            h = _shared_attn_apply(cfg, shared, h, positions)
+        for i, kind in enumerate(cfg.pattern):
+            h, a, _ = block_apply(cfg, kind, gp[f"b{i}"], h, positions=positions, memory=memory)
+            h = _constrain(cfg, h)
+            aux = aux + a
+        return h, aux
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, auxs = jax.lax.scan(body, x, params["groups"], unroll=cfg.scan_unroll)
+    return x, auxs.sum()
+
+
+def encode(cfg: ModelConfig, params: dict, frames):
+    """Whisper-style encoder over stubbed frame embeddings (B, Sf, d)."""
+    enc = params["encoder"]
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1]), frames.shape[:2])
+
+    def body(h, gp):
+        h, _, _ = block_apply(cfg, "attn_nc", gp["b0"], h, positions=positions)
+        return h, None
+
+    b = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(b, frames.astype(cfg.cdtype), enc["groups"], unroll=cfg.scan_unroll)
+    return apply_norm(cfg, x, enc["final_norm"])
+
+
+def forward(cfg: ModelConfig, params: dict, tokens, memory=None):
+    """tokens: (B,S) int32; memory: (B,Sm,d) stub embeddings (vlm/audio).
+    Returns (logits (B,S,V), aux)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.encoder_layers and memory is not None:
+        memory = encode(cfg, params, memory)
+    elif memory is not None:
+        memory = memory.astype(cfg.cdtype)
+    x = embed_apply(cfg, params["embed"], tokens, positions)
+    x, aux = _stack_forward(cfg, params, x, positions, memory)
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = unembed_apply(cfg, params["embed"], x)
+    return logits, aux
+
+
+def distill_loss(cfg: ModelConfig, params: dict, batch: dict):
+    """Token-level knowledge-distillation loss: CE of the student against the
+    teacher's hard labels (the paper trains on teacher argmax labels) plus the
+    MoE load-balance aux. batch: {tokens, labels[, memory]}."""
+    logits, aux = forward(cfg, params, batch["tokens"], batch.get("memory"))
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lab = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+    ce = (lse - lab).mean()
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def ring_len(cfg: ModelConfig, kind: str, seq: int) -> int:
+    """Self-attention cache length for a block: the full seq, or the ring
+    size min(seq, window) under the §Perf ring-cache optimization."""
+    if not cfg.decode_window_slicing:
+        return seq
+    if kind in ("attn_local", "moe_local") and cfg.window_size:
+        w = cfg.window_size
+    elif kind == "shared":
+        w = cfg.window_size or cfg.attn_window_override
+    else:
+        w = cfg.attn_window_override
+    return min(seq, w) if w else seq
+
+
+def cache_metas(cfg: ModelConfig, batch: int, seq: int, mem_len: int = 0) -> dict:
+    """ParamMeta tree describing the decode cache (shapes + logical axes);
+    materialize with zeros, or make abstract for the dry-run."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    G = cfg.num_groups
+
+    def kv_meta(length, seq_ax="cache_seq"):
+        # cross-attn memory caches use "mem_seq" (odd lengths: 1601/1500 —
+        # never sharded); self-attn caches use "cache_seq".
+        return ParamMeta((G, batch, length, kv, hd),
+                         ("layers", "batch", seq_ax, "kv_heads", "unsharded"))
+
+    d_inner, H, Pm, N = (cfg.ssm_expand * cfg.d_model,
+                         (cfg.ssm_expand * cfg.d_model) // max(cfg.ssm_head_dim, 1),
+                         cfg.ssm_head_dim, cfg.ssm_state)
+    caches: dict = {}
+    for i, kind in enumerate(cfg.pattern):
+        key = f"b{i}"
+        if kind in ATTN_KINDS:
+            r = ring_len(cfg, kind, seq)
+            caches[key] = {"k": kv_meta(r), "v": kv_meta(r)}
+        elif kind == "xattn":
+            caches[key] = {"xk": kv_meta(mem_len, "mem_seq"), "xv": kv_meta(mem_len, "mem_seq")}
+        elif kind == "attn_xattn":
+            r = ring_len(cfg, kind, seq)
+            caches[key] = {"k": kv_meta(r), "v": kv_meta(r),
+                           "xk": kv_meta(mem_len, "mem_seq"),
+                           "xv": kv_meta(mem_len, "mem_seq")}
+        elif kind == "mamba":
+            caches[key] = {
+                "ssm": ParamMeta((G, batch, H, Pm, N),
+                                 ("layers", "batch", "unsharded", "unsharded", "unsharded")),
+                "conv_x": ParamMeta((G, batch, cfg.ssm_conv - 1, d_inner),
+                                    ("layers", "batch", "unsharded", "ff")),
+                "conv_bc": ParamMeta((G, batch, cfg.ssm_conv - 1, 2 * N),
+                                     ("layers", "batch", "unsharded", "unsharded")),
+            }
+        elif kind == "rwkv":
+            P_ = cfg.ssm_head_dim
+            H_ = cfg.d_model // P_
+            caches[key] = {
+                "wkv": ParamMeta((G, batch, H_, P_, P_),
+                                 ("layers", "batch", "unsharded", "unsharded", "unsharded")),
+                "tm_last": ParamMeta((G, batch, cfg.d_model), ("layers", "batch", "embed")),
+                "cm_last": ParamMeta((G, batch, cfg.d_model), ("layers", "batch", "embed")),
+            }
+    if cfg.shared_attn:
+        r = ring_len(cfg, "shared", seq)
+        caches["shared"] = {"k": kv_meta(r), "v": kv_meta(r)}
+    return caches
+
+
+def cache_dtype(path_key: str, default_dtype):
+    """SSM/wkv recurrent states stay fp32; K/V and conv taps use model dtype."""
+    return jnp.float32 if path_key in ("ssm", "wkv") else default_dtype
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, mem_len: int = 0, dtype=None):
+    dtype = dtype or cfg.cdtype
+    metas = cache_metas(cfg, batch, seq, mem_len)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, m: jnp.zeros(m.shape, cache_dtype(path[-1].key, dtype)),
+        metas, is_leaf=lambda v: isinstance(v, ParamMeta),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def block_decode(cfg: ModelConfig, kind: str, p: dict, x, cache, pos):
+    """One-token decode for a single block. Returns (x, new_cache)."""
+    if kind in ("attn", "attn_local", "moe", "moe_local"):
+        h = apply_norm(cfg, x, p["ln1"])
+        out, new_kv = attn.decode_self_attention(
+            cfg, p["attn"], h, cache, pos, window=_window_for(cfg, kind)
+        )
+        if cfg.post_norm:
+            out = apply_norm(cfg, out, p["ln1_post"])
+        x = x + out
+        h = apply_norm(cfg, x, p["ln2"])
+        if kind in ("moe", "moe_local"):
+            out, _ = moe_mod.moe_apply(cfg, p["moe"], h)
+        else:
+            out = mlp_apply(cfg, p["mlp"], h)
+        if cfg.post_norm:
+            out = apply_norm(cfg, out, p["ln2_post"])
+        return x + out, new_kv
+    if kind == "xattn":
+        h = apply_norm(cfg, x, p["ln1"])
+        out = attn.decode_cross_attention(cfg, p["xattn"], h, {"k": cache["xk"], "v": cache["xv"]})
+        x = x + jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype) * out
+        h = apply_norm(cfg, x, p["ln2"])
+        return x + mlp_apply(cfg, p["mlp"], h), cache
+    if kind == "attn_xattn":
+        h = apply_norm(cfg, x, p["ln1"])
+        out, new_kv = attn.decode_self_attention(
+            cfg, p["attn"], h, {"k": cache["k"], "v": cache["v"]}, pos, window=0
+        )
+        x = x + out
+        h = apply_norm(cfg, x, p["lnx"])
+        x = x + attn.decode_cross_attention(cfg, p["xattn"], h,
+                                            {"k": cache["xk"], "v": cache["xv"]})
+        h = apply_norm(cfg, x, p["ln2"])
+        x = x + mlp_apply(cfg, p["mlp"], h)
+        return x, dict(cache, k=new_kv["k"], v=new_kv["v"])
+    if kind == "mamba":
+        h = apply_norm(cfg, x, p["ln1"])
+        out, new_cache = mamba2.mamba2_decode(cfg, p["mamba"], h, cache)
+        return x + out, new_cache
+    if kind == "rwkv":
+        h = apply_norm(cfg, x, p["ln1"])
+        out, new_cache = rwkv6.rwkv6_decode(cfg, p["rwkv"], h, dict(cache))
+        x = x + out
+        h = apply_norm(cfg, x, p["ln2"])
+        out = rwkv6.rwkv6_channel_mix(cfg, p["rwkv"]["cm"], h, last=cache["cm_last"])
+        new_cache = dict(new_cache, cm_last=h[:, 0])
+        return x + out, new_cache
+    raise ValueError(kind)
+
+
+def decode_step(cfg: ModelConfig, params: dict, caches: dict, tokens, pos):
+    """serve_step: one new token against a cache of `seq` positions.
+    tokens: (B,1) int32; pos: scalar int32. Returns (logits (B,1,V), caches')."""
+    B = tokens.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    x = embed_apply(cfg, params["embed"], tokens, positions)
+    shared = params.get("shared_attn")
+    shared_cache = caches.get("shared")
+
+    group_caches = {k: v for k, v in caches.items() if k != "shared"}
+    xs = (params["groups"], group_caches)
+    if shared is not None:
+        xs = (params["groups"], group_caches, shared_cache)
+
+    def group_body(carry, gxs):
+        h = carry
+        if shared is not None:
+            gp, gcache, scache = gxs
+            h2 = apply_norm(cfg, h, shared["ln1"])
+            out, new_sc = attn.decode_self_attention(
+                cfg, shared["attn"], h2, scache, pos, window=cfg.window_size
+            )
+            h = h + out
+            h2 = apply_norm(cfg, h, shared["ln2"])
+            h = h + mlp_apply(cfg, shared["mlp"], h2)
+        else:
+            gp, gcache = gxs
+            new_sc = None
+        new_gcache = {}
+        for i, kind in enumerate(cfg.pattern):
+            h, new_gcache[f"b{i}"] = block_decode(cfg, kind, gp[f"b{i}"], h, gcache[f"b{i}"], pos)
+        ys = (new_gcache, new_sc) if shared is not None else new_gcache
+        return h, ys
+
+    x, ys = jax.lax.scan(group_body, x, xs, unroll=cfg.scan_unroll)
+    if shared is not None:
+        new_caches, new_shared = ys
+        new_caches = dict(new_caches, shared=new_shared)
+    else:
+        new_caches = dict(ys)
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = unembed_apply(cfg, params["embed"], x)
+    return logits, new_caches
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, cache_len: int, memory=None):
+    """Run the full prompt, returning (logits of last position, caches sized
+    cache_len). Attention caches are filled with the prompt K/V; SSM states
+    are produced by the chunked scans' final states via a replay pass."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.encoder_layers and memory is not None:
+        memory = encode(cfg, params, memory)
+    elif memory is not None:
+        memory = memory.astype(cfg.cdtype)
+    x = embed_apply(cfg, params["embed"], tokens, positions)
+    shared = params.get("shared_attn")
+
+    def group_body(carry, gp):
+        h = carry
+        caches = {}
+        if shared is not None:
+            h2 = apply_norm(cfg, h, shared["ln1"])
+            out, kv = attn.self_attention(cfg, shared["attn"], h2,
+                                          window=cfg.window_size, positions=positions)
+            h = h + out
+            h2 = apply_norm(cfg, h, shared["ln2"])
+            h = h + mlp_apply(cfg, shared["mlp"], h2)
+            caches["shared"] = {"k": kv[0], "v": kv[1]}
+        for i, kind in enumerate(cfg.pattern):
+            h, _, c = block_apply(cfg, kind, gp[f"b{i}"], h, positions=positions,
+                                  memory=memory, want_cache=True)
+            if c is not None:
+                caches[f"b{i}"] = c
+        return h, caches
+
+    body = jax.checkpoint(group_body) if cfg.remat else group_body
+    x, caches = jax.lax.scan(body, x, params["groups"], unroll=cfg.scan_unroll)
+    x = apply_norm(cfg, x, params["final_norm"])
+    logits = unembed_apply(cfg, params["embed"], x[:, -1:])
+
+    # Lay self-attention K/V caches out for decode: either padded to
+    # cache_len, or — under the ring-cache optimization — the last R
+    # positions rolled into their `p mod R` slots (cross "xk"/"xv" and SSM
+    # states keep their natural shapes).
+    def to_ring(c, kind):
+        Sp = c.shape[2]
+        R = ring_len(cfg, kind, cache_len)
+        if Sp <= R:  # slots p % R == p: plain end-padding
+            return jnp.pad(c, ((0, 0), (0, 0), (0, R - Sp), (0, 0), (0, 0)))
+        return jnp.roll(c[:, :, Sp - R :], Sp % R, axis=2)
+
+    kind_of = {f"b{i}": kind for i, kind in enumerate(cfg.pattern)}
+    kind_of["shared"] = "shared"
+    caches = {
+        k: {kk: (to_ring(vv, kind_of[k]) if kk in ("k", "v") else vv)
+            for kk, vv in v.items()}
+        for k, v in caches.items()
+    }
+    return logits, caches

@@ -1,0 +1,92 @@
+"""Binds the AMS core to the segmentation world (student + oracle teacher)."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.video import OracleTeacher, SyntheticVideo, VideoConfig
+from repro.models.seg.student import (
+    SegConfig,
+    make_student,
+    seg_forward,
+    seg_loss,
+    seg_predict,
+)
+
+
+def phi_pixel_loss(label_now: np.ndarray, label_prev: np.ndarray) -> float:
+    """Task loss between consecutive teacher labels (0-1 pixel loss) — the
+    φ-score signal for segmentation."""
+    return float(np.mean(label_now != label_prev))
+
+
+@dataclass
+class SegWorld:
+    video: SyntheticVideo
+    teacher: OracleTeacher
+    seg_cfg: SegConfig
+
+    def __post_init__(self):
+        cfg = self.seg_cfg
+
+        @jax.jit
+        def loss_and_grad(params, frames, labels):
+            return jax.value_and_grad(lambda p: seg_loss(cfg, p, frames, labels))(params)
+
+        @jax.jit
+        def predict(params, frames):
+            return seg_predict(cfg, params, frames)
+
+        @jax.jit
+        def accuracy(params, frames, labels):
+            pred = seg_predict(cfg, params, frames)
+            return (pred == labels).mean()
+
+        self.loss_and_grad = loss_and_grad
+        self.predict = predict
+        self.accuracy = accuracy
+
+    @classmethod
+    def make(cls, video_cfg: VideoConfig, seg_cfg: SegConfig | None = None,
+             teacher_error: float = 0.04):
+        video = SyntheticVideo(video_cfg)
+        seg_cfg = seg_cfg or SegConfig(n_classes=video_cfg.n_classes)
+        return cls(video=video, teacher=OracleTeacher(video, error_rate=teacher_error),
+                   seg_cfg=seg_cfg)
+
+
+def pretrain_student(seg_cfg: SegConfig, n_videos: int = 6, steps: int = 200,
+                     batch: int = 8, lr: float = 2e-3, seed: int = 42,
+                     video_kw: dict | None = None):
+    """The "No Customization" checkpoint: train on a generic mixture of
+    videos (different seeds/drifts) — analogous to the paper's
+    Cityscapes/VOC-pretrained student."""
+    from repro.core.masked_adam import adam_update, init_state
+
+    video_kw = video_kw or {}
+    videos = [
+        SyntheticVideo(VideoConfig(seed=1000 + i, drift_period=120 + 60 * i, **video_kw))
+        for i in range(n_videos)
+    ]
+    teachers = [OracleTeacher(v, error_rate=0.04) for v in videos]
+    rng = np.random.default_rng(seed)
+    params = make_student(seg_cfg, jax.random.PRNGKey(seed))
+    opt = init_state(params)
+
+    @jax.jit
+    def step(params, opt, frames, labels):
+        loss, grads = jax.value_and_grad(lambda p: seg_loss(seg_cfg, p, frames, labels))(params)
+        params, opt, _ = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    for it in range(steps):
+        vi = rng.integers(0, n_videos)
+        idxs = rng.integers(0, videos[vi].cfg.n_frames, size=batch)
+        frames = np.stack([videos[vi].frame(int(i))[0] for i in idxs])
+        labels = np.stack([teachers[vi].label(int(i)) for i in idxs])
+        params, opt, loss = step(params, opt, frames, labels)
+    return params

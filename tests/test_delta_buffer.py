@@ -1,0 +1,118 @@
+"""Sparse delta codec + replay buffer + controllers."""
+import gzip
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.atr import ATRController
+from repro.core.buffer import ReplayBuffer
+from repro.core.delta import apply_delta, encode_delta, full_model_bytes
+from repro.core.sampler import ASRController
+
+
+# ---------------- delta codec ----------------
+
+
+def _tree(rng, sizes=((16, 8), (33,), (2, 3, 5))):
+    return {f"l{i}": jnp.asarray(rng.normal(size=s), jnp.float32)
+            for i, s in enumerate(sizes)}
+
+
+def test_delta_roundtrip(rng):
+    old = _tree(rng)
+    new = jax.tree.map(lambda x: x + 1.0, old)
+    mask = jax.tree.map(lambda x: jnp.asarray(rng.integers(0, 2, x.shape), bool), old)
+    delta = encode_delta(new, mask)
+    got = apply_delta(old, delta)
+    for k in old:
+        m = np.asarray(mask[k])
+        np.testing.assert_allclose(np.asarray(got[k])[m], np.asarray(new[k])[m],
+                                   atol=2e-3)  # fp16 wire format
+        np.testing.assert_array_equal(np.asarray(got[k])[~m], np.asarray(old[k])[~m])
+
+
+def test_delta_bytes_accounting(rng):
+    tree = _tree(rng, sizes=((1000,),))
+    mask = {"l0": jnp.asarray(np.arange(1000) < 50)}
+    d = encode_delta(tree, mask)
+    assert d.value_bytes == 50 * 2
+    assert d.mask_bytes < 1000 / 8 + 64
+    assert d.total_bytes < full_model_bytes(tree)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), frac=st.floats(0, 1))
+def test_property_delta_roundtrip(seed, frac):
+    r = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(r.normal(size=(r.integers(1, 200),)), jnp.float32)}
+    mask = {"a": jnp.asarray(r.uniform(size=tree["a"].shape) < frac)}
+    new = jax.tree.map(lambda x: x * 2 + 1, tree)
+    got = apply_delta(tree, encode_delta(new, mask))
+    m = np.asarray(mask["a"])
+    np.testing.assert_allclose(np.asarray(got["a"])[m], np.asarray(new["a"])[m],
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(got["a"])[~m], np.asarray(tree["a"])[~m])
+
+
+# ---------------- replay buffer ----------------
+
+
+def test_buffer_horizon_window():
+    buf = ReplayBuffer(horizon=10.0, slack=0.0)
+    for t in range(20):
+        buf.add(np.full((2, 2), t), np.full((2, 2), t), float(t))
+    idx = buf.window_indices(19.0)
+    stamps = np.asarray(buf.stamps)[idx]
+    assert stamps.min() >= 9.0
+    r = np.random.default_rng(0)
+    frames, labels = buf.sample(r, 64, 19.0)
+    assert frames.min() >= 9.0  # only window frames sampled
+    assert frames.shape == (64, 2, 2)
+
+
+def test_buffer_eviction():
+    buf = ReplayBuffer(horizon=5.0, slack=1.0)
+    for t in range(100):
+        buf.add(np.zeros(1), np.zeros(1), float(t))
+    assert len(buf) < 100
+    assert min(buf.stamps) >= 99 - 5 - 1 - 1
+
+
+# ---------------- ASR (Eq. 1) ----------------
+
+
+def test_asr_increases_on_change_decreases_on_static():
+    asr = ASRController(phi_target=0.1, eta=1.0, r_min=0.1, r_max=1.0, delta_t=1.0)
+    asr.rate = 0.5
+    asr.observe(0.5)  # big scene change
+    assert asr.maybe_update(1.0) > 0.5
+    asr2 = ASRController(phi_target=0.1, eta=1.0, r_min=0.1, r_max=1.0, delta_t=1.0)
+    asr2.rate = 0.5
+    asr2.observe(0.0)
+    assert asr2.maybe_update(1.0) < 0.5
+
+
+@settings(max_examples=30, deadline=None)
+@given(phis=st.lists(st.floats(0, 1), min_size=1, max_size=50))
+def test_property_asr_bounded(phis):
+    asr = ASRController(phi_target=0.2, eta=2.0, r_min=0.1, r_max=1.0, delta_t=0.0)
+    for i, p in enumerate(phis):
+        asr.observe(p)
+        r = asr.maybe_update(float(i + 1))
+        assert 0.1 <= r <= 1.0
+
+
+# ---------------- ATR (Eq. 2) ----------------
+
+
+def test_atr_slowdown_cycle():
+    atr = ATRController(tau_min=10.0, delta=2.0, gamma0=0.25, gamma1=0.35)
+    assert atr.update(0.5) == 10.0  # fast scene: stay at tau_min
+    assert atr.update(0.2) == 12.0  # enter slowdown, stretch
+    assert atr.update(0.2) == 14.0
+    assert atr.update(0.3) == 16.0  # hysteresis: still below gamma1
+    assert atr.update(0.4) == 10.0  # exit: snap back to tau_min

@@ -1,0 +1,63 @@
+"""Miniature dry-run on the CPU's own devices: the launch plumbing (rules,
+pspecs, lower, compile) works end-to-end without the 512-device flag."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke
+from repro.core.masked_adam import MaskedAdamState
+from repro.launch.shardings import rules_for
+from repro.launch.steps import make_serve_step, make_train_step
+from repro.models.registry import build
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ["gemma2_9b", "mixtral_8x22b", "zamba2_7b",
+                                  "whisper_large_v3", "rwkv6_3b"])
+def test_train_step_lowers_and_compiles(arch, mesh):
+    cfg = get_smoke(arch)
+    model = build(cfg)
+    rules = rules_for(cfg, mesh, shape_kind="train")
+    pspecs = model.pspecs(rules)
+    params = model.abstract()
+    opt = MaskedAdamState(
+        m=params,
+        v=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params),
+        count=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    mask = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bool_), params)
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 16), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((2, 16), jnp.int32)}
+    if cfg.num_xattn_tokens:
+        batch["memory"] = jax.ShapeDtypeStruct((2, cfg.num_xattn_tokens, cfg.d_model),
+                                               cfg.cdtype)
+    jax.set_mesh(mesh)
+    step = make_train_step(model)
+    jitted = jax.jit(step, in_shardings=(pspecs, MaskedAdamState(pspecs, pspecs, P()),
+                                         pspecs, None))
+    compiled = jitted.lower(params, opt, mask, batch).compile()
+    assert compiled.cost_analysis() is not None
+    assert compiled.memory_analysis() is not None
+
+
+@pytest.mark.parametrize("arch", ["gemma_2b", "zamba2_7b"])
+def test_serve_step_lowers_and_compiles(arch, mesh):
+    cfg = get_smoke(arch)
+    model = build(cfg)
+    rules = rules_for(cfg, mesh, shape_kind="decode")
+    pspecs = model.pspecs(rules)
+    params = model.abstract()
+    caches = model.abstract_cache(2, 32, mem_len=cfg.num_xattn_tokens)
+    cache_specs = model.cache_pspecs(2, 32, rules, mem_len=cfg.num_xattn_tokens)
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 1), jnp.int32),
+             "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    jax.set_mesh(mesh)
+    step = make_serve_step(model)
+    jitted = jax.jit(step, in_shardings=(pspecs, cache_specs, None))
+    compiled = jitted.lower(params, caches, batch).compile()
+    assert compiled.memory_analysis() is not None

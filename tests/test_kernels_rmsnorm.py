@@ -1,0 +1,19 @@
+"""RMSNorm Pallas kernel vs oracle: shape/dtype sweep."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rmsnorm.ops import rms_norm_pallas
+from repro.kernels.rmsnorm.ref import rms_norm_ref
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (3, 7, 64), (1, 256), (5, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel_sweep(rng, shape, dtype):
+    x = jnp.asarray(rng.normal(size=shape), dtype)
+    w = jnp.asarray(rng.normal(size=shape[-1]) * 0.1, jnp.float32)
+    got = rms_norm_pallas(x, w)
+    ref = rms_norm_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)

@@ -1,0 +1,97 @@
+"""Algorithm 2 (gradient-guided coordinate descent for Adam) unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.masked_adam import (
+    adam_update,
+    init_momentum,
+    init_state,
+    masked_adam_update,
+    momentum_update,
+)
+
+
+def _tree(rng, shapes):
+    return {k: jnp.asarray(rng.normal(size=s), jnp.float32) for k, s in shapes.items()}
+
+
+SHAPES = {"a": (64, 32), "b": (128,), "c": (4, 4, 4)}
+
+
+def test_full_mask_equals_reference_adam(rng):
+    """With mask == 1 the update must equal the paper's Eq (lines 8-12)."""
+    p = _tree(rng, SHAPES)
+    st = init_state(p)
+    lr, b1, b2, eps = 1e-3, 0.9, 0.999, 1e-8
+    m = {k: np.zeros(s) for k, s in SHAPES.items()}
+    v = {k: np.zeros(s) for k, s in SHAPES.items()}
+    cur = {k: np.asarray(x) for k, x in p.items()}
+    for i in range(1, 4):
+        g = _tree(rng, SHAPES)
+        ones = jax.tree.map(lambda x: jnp.ones(x.shape, bool), p)
+        p, st, u = masked_adam_update(p, g, st, ones, lr=lr, b1=b1, b2=b2, eps=eps)
+        for k in SHAPES:
+            gk = np.asarray(g[k])
+            m[k] = b1 * m[k] + (1 - b1) * gk
+            v[k] = b2 * v[k] + (1 - b2) * gk**2
+            uk = lr * np.sqrt(1 - b2**i) / (1 - b1**i) * m[k] / np.sqrt(v[k] + eps)
+            cur[k] = cur[k] - uk
+            np.testing.assert_allclose(np.asarray(p[k]), cur[k], rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(u[k]), uk, rtol=1e-5, atol=1e-7)
+
+
+def test_moments_track_all_coordinates(rng):
+    """m, v update for EVERY coordinate even when masked out (the paper's key
+    requirement for consistent Adam state, §3.1.2)."""
+    p = _tree(rng, SHAPES)
+    g = _tree(rng, SHAPES)
+    st = init_state(p)
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, bool), p)
+    p2, st2, u = masked_adam_update(p, g, st, zeros)
+    for k in SHAPES:
+        np.testing.assert_array_equal(np.asarray(p2[k]), np.asarray(p[k]))  # frozen
+        assert float(jnp.abs(st2.m[k]).sum()) > 0  # moments moved
+        assert float(jnp.abs(st2.v[k]).sum()) > 0
+        assert float(jnp.abs(u[k]).sum()) > 0  # u computed for all
+
+
+def test_partial_mask_moves_only_selected(rng):
+    p = _tree(rng, SHAPES)
+    g = _tree(rng, SHAPES)
+    st = init_state(p)
+    mask = jax.tree.map(lambda x: jnp.asarray(rng.integers(0, 2, x.shape), bool), p)
+    p2, _, _ = masked_adam_update(p, g, st, mask)
+    for k in SHAPES:
+        moved = np.asarray(p2[k]) != np.asarray(p[k])
+        assert not np.any(moved & ~np.asarray(mask[k]))
+
+
+def test_mask_independence_of_moments(rng):
+    """Moments after K steps are identical regardless of the mask — the state
+    depends only on the gradients at the visited points (here: same grads)."""
+    p = _tree(rng, SHAPES)
+    gs = [_tree(rng, SHAPES) for _ in range(3)]
+    m1 = jax.tree.map(lambda x: jnp.ones(x.shape, bool), p)
+    m2 = jax.tree.map(lambda x: jnp.zeros(x.shape, bool), p)
+    # NOTE: with mask=0 params stay put so grads would differ in real training;
+    # here we feed identical grads to isolate the moment arithmetic.
+    stA, stB = init_state(p), init_state(p)
+    pA, pB = p, p
+    for g in gs:
+        _, stA, _ = masked_adam_update(pA, g, stA, m2)
+        _, stB, _ = masked_adam_update(pB, g, stB, m2)
+    for k in SHAPES:
+        np.testing.assert_allclose(np.asarray(stA.m[k]), np.asarray(stB.m[k]))
+
+
+def test_momentum_baseline(rng):
+    p = _tree(rng, SHAPES)
+    g = _tree(rng, SHAPES)
+    st = init_momentum(p)
+    p2, st2, u = momentum_update(p, g, st, lr=0.1, momentum=0.9)
+    for k in SHAPES:
+        np.testing.assert_allclose(
+            np.asarray(p2[k]), np.asarray(p[k]) - 0.1 * np.asarray(g[k]), rtol=1e-6
+        )

@@ -1,0 +1,70 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.layers import apply_rope, rms_norm, softcap
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 999), pos0=st.integers(0, 10_000))
+def test_rope_preserves_norm(seed, pos0):
+    """Rotary embedding is a rotation: per-head vector norms are invariant."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(1, 4, 2, 8)), jnp.float32)
+    pos = jnp.full((1, 4), pos0, jnp.int32) + jnp.arange(4)
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 999), cap=st.floats(1.0, 100.0))
+def test_softcap_bounded_and_monotone(seed, cap):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(np.sort(r.normal(scale=50, size=64)), jnp.float32)
+    y = np.asarray(softcap(x, cap))
+    assert np.all(np.abs(y) <= cap + 1e-4)
+    assert np.all(np.diff(y) >= -1e-5)  # monotone
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_rmsnorm_scale_invariance(seed):
+    """rms_norm(c*x) == rms_norm(x) for any positive scalar c."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(2, 16)), jnp.float32)
+    w = jnp.zeros(16)
+    a = np.asarray(rms_norm(x, w))
+    b = np.asarray(rms_norm(7.3 * x, w))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 200), t=st.floats(0.0, 500.0))
+def test_video_mask_classes_in_range(seed, t):
+    from repro.data.video import SyntheticVideo, VideoConfig
+
+    v = SyntheticVideo(VideoConfig(height=24, width=24, seed=seed))
+    img, mask = v.frame(int(t * v.cfg.fps) % v.cfg.n_frames)
+    assert img.min() >= 0.0 and img.max() <= 1.0
+    assert mask.min() >= 0 and mask.max() < v.cfg.n_classes
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500), frac=st.floats(0.01, 0.5))
+def test_masked_adam_invariant_unmasked_frozen(seed, frac):
+    """For ANY mask, unmasked coordinates never move (Alg. 2 line 13)."""
+    from repro.core.masked_adam import init_state, masked_adam_update
+
+    r = np.random.default_rng(seed)
+    p = {"w": jnp.asarray(r.normal(size=200), jnp.float32)}
+    g = {"w": jnp.asarray(r.normal(size=200), jnp.float32)}
+    mask = {"w": jnp.asarray(r.uniform(size=200) < frac)}
+    p2, _, _ = masked_adam_update(p, g, init_state(p), mask)
+    frozen = ~np.asarray(mask["w"])
+    np.testing.assert_array_equal(np.asarray(p2["w"])[frozen],
+                                  np.asarray(p["w"])[frozen])

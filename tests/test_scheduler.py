@@ -1,0 +1,26 @@
+"""Round-robin GPU scheduler (Appendix E) accounting."""
+import pytest
+
+from repro.core.scheduler import GPUCostModel, RoundRobinScheduler
+
+
+def test_gpu_busy_accounting():
+    s = RoundRobinScheduler(cost=GPUCostModel(teacher_infer_s=0.2, train_iter_s=0.05))
+    assert s.try_acquire(0.0, n_frames=4, k_iters=20)  # 0.8 + 1.0 = 1.8s
+    assert s.gpu_free_at == pytest.approx(1.8)
+    assert not s.try_acquire(1.0, 1, 20)  # still busy -> deferred
+    assert s.deferred == 1
+    assert s.try_acquire(2.0, 1, 20)
+    assert s.served == 2
+    assert 0 < s.utilization(3.0) <= 1.5
+
+
+def test_saturation_grows_deferrals():
+    s = RoundRobinScheduler(cost=GPUCostModel(teacher_infer_s=0.25, train_iter_s=0.05))
+    granted = 0
+    for step in range(100):  # 10 clients asking every second
+        t = step / 10
+        if s.try_acquire(t, 2, 20):
+            granted += 1
+    assert granted < 100  # GPU can't serve all
+    assert s.deferred > 0

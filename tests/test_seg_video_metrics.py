@@ -1,0 +1,114 @@
+"""Segmentation world: student model, synthetic video, mIoU metric."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.video import OracleTeacher, SyntheticVideo, VideoConfig, stop_and_go
+from repro.metrics.miou import confusion, miou
+from repro.models.seg.student import (
+    SegConfig,
+    make_student,
+    seg_forward,
+    seg_loss,
+    seg_param_count,
+    seg_predict,
+)
+
+
+def test_student_shapes_and_grads():
+    cfg = SegConfig(n_classes=5)
+    params = make_student(cfg, jax.random.PRNGKey(0))
+    img = jnp.zeros((2, 32, 32, 3))
+    logits = seg_forward(cfg, params, img)
+    assert logits.shape == (2, 32, 32, 5)
+    labels = jnp.zeros((2, 32, 32), jnp.int32)
+    loss, grads = jax.value_and_grad(lambda p: seg_loss(cfg, p, img, labels))(params)
+    assert bool(jnp.isfinite(loss))
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+    assert seg_param_count(cfg) > 10_000
+
+
+def test_student_overfits_single_frame():
+    """Capacity sanity: a few Adam steps fit one frame (distillation works)."""
+    from repro.core.masked_adam import adam_update, init_state
+
+    cfg = SegConfig(n_classes=3)
+    v = SyntheticVideo(VideoConfig(height=32, width=32, n_classes=3, seed=1))
+    img, mask = v.frame(0)
+    params = make_student(cfg, jax.random.PRNGKey(0))
+    opt = init_state(params)
+
+    @jax.jit
+    def step(p, o):
+        l, g = jax.value_and_grad(lambda q: seg_loss(cfg, q, img[None], mask[None]))(p)
+        p, o, _ = adam_update(p, g, o, lr=5e-3)
+        return p, o, l
+
+    losses = []
+    for _ in range(60):
+        params, opt, l = step(params, opt)
+        losses.append(float(l))
+    assert losses[-1] < 0.5 * losses[0]
+    pred = np.asarray(seg_predict(cfg, params, img[None])[0])
+    assert miou(pred, mask, 3) > 0.4
+
+
+def test_video_deterministic_and_drifts():
+    v = SyntheticVideo(VideoConfig(seed=5))
+    f1a, m1a = v.frame(10)
+    f1b, m1b = v.frame(10)
+    np.testing.assert_array_equal(f1a, f1b)
+    np.testing.assert_array_equal(m1a, m1b)
+    # palette drift: same scene positions much later look different
+    f2, _ = v.frame(10 + int(v.cfg.fps * v.cfg.drift_period / 2))
+    assert np.abs(f1a - f2).mean() > 0.05
+
+
+def test_motion_schedule_freezes_scene():
+    v = SyntheticVideo(VideoConfig(seed=2, motion_schedule=stop_and_go(1.0, 100.0)))
+    fps = v.cfg.fps
+    m_before = v.frame(int(3 * fps))[1]
+    m_after = v.frame(int(5 * fps))[1]
+    moved = (m_before != m_after).mean()
+    v2 = SyntheticVideo(VideoConfig(seed=2))
+    n_before = v2.frame(int(3 * fps))[1]
+    n_after = v2.frame(int(5 * fps))[1]
+    assert moved < (n_before != n_after).mean()
+
+
+def test_oracle_teacher_error_rate():
+    v = SyntheticVideo(VideoConfig(seed=3))
+    t = OracleTeacher(v, error_rate=0.05)
+    _, gt = v.frame(7)
+    lab = t.label(7)
+    err = (lab != gt).mean()
+    assert 0.0 < err < 0.15
+
+
+def test_miou_hand_case():
+    pred = np.array([[0, 0], [1, 1]])
+    target = np.array([[0, 1], [1, 1]])
+    # class0: tp=1 fp=1 fn=0 -> 1/2 ; class1: tp=2 fp=0 fn=1 -> 2/3
+    assert miou(pred, target, 2) == pytest.approx((0.5 + 2 / 3) / 2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 999), n=st.integers(2, 6))
+def test_property_miou_bounds(seed, n):
+    r = np.random.default_rng(seed)
+    a = r.integers(0, n, size=(8, 8))
+    b = r.integers(0, n, size=(8, 8))
+    m = miou(a, b, n)
+    assert 0.0 <= m <= 1.0
+    assert miou(a, a, n) == 1.0
+
+
+def test_confusion_totals():
+    r = np.random.default_rng(1)
+    a = r.integers(0, 4, size=(16, 16))
+    b = r.integers(0, 4, size=(16, 16))
+    cm = confusion(a, b, 4)
+    assert cm.sum() == a.size

@@ -1,0 +1,63 @@
+"""Coordinate-selection strategies (paper §3.1.2 / Table 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import selection
+
+
+def _tree(rng, sizes=(1000, 333, 64)):
+    return {f"l{i}": jnp.asarray(rng.normal(size=s), jnp.float32)
+            for i, s in enumerate(sizes)}
+
+
+@pytest.mark.parametrize("frac", [0.01, 0.05, 0.2, 0.5])
+def test_gradient_guided_fraction(rng, frac):
+    tree = _tree(rng)
+    mask = selection.gradient_guided_mask(tree, frac)
+    assert selection.mask_fraction(mask) == pytest.approx(frac, rel=0.1, abs=0.01)
+
+
+def test_gradient_guided_picks_largest(rng):
+    tree = {"a": jnp.asarray(np.arange(100, dtype=np.float32))}
+    mask = selection.gradient_guided_mask(tree, 0.1)
+    idx = np.nonzero(np.asarray(mask["a"]))[0]
+    assert set(idx) == set(range(90, 100))
+
+
+def test_bisect_matches_sort_threshold(rng):
+    tree = _tree(rng, sizes=(5000, 2000))
+    thr = float(selection.global_threshold(tree, 0.07))
+    flat = np.abs(np.concatenate([np.ravel(l) for l in jax.tree.leaves(tree)]))
+    exact = np.sort(flat)[int((1 - 0.07) * flat.size)]
+    assert thr == pytest.approx(exact, rel=0.01)
+
+
+@pytest.mark.parametrize("strategy", ["random", "first", "last", "first_last"])
+def test_ablation_strategies_fraction(rng, strategy):
+    tree = _tree(rng)
+    mask = selection.make_mask(strategy, params=tree, frac=0.1,
+                               rng=jax.random.PRNGKey(0))
+    assert selection.mask_fraction(mask) == pytest.approx(0.1, rel=0.15, abs=0.02)
+
+
+def test_first_vs_last_disjoint_at_small_frac(rng):
+    tree = _tree(rng)
+    f = selection.first_layers_mask(tree, 0.2)
+    l = selection.last_layers_mask(tree, 0.2)
+    overlap = sum(int(jnp.sum(a & b)) for a, b in zip(jax.tree.leaves(f),
+                                                      jax.tree.leaves(l)))
+    assert overlap == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(frac=st.floats(0.01, 0.9), seed=st.integers(0, 1000))
+def test_property_mask_fraction(frac, seed):
+    rng = np.random.default_rng(seed)
+    tree = _tree(rng, sizes=(700, 411))
+    mask = selection.gradient_guided_mask(tree, frac)
+    got = selection.mask_fraction(mask)
+    assert abs(got - frac) < 0.05 + 0.1 * frac

@@ -1,0 +1,77 @@
+"""End-to-end behaviour tests for the AMS system (paper Algorithm 1 loop)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.delta import apply_delta
+from repro.core.server import AMSConfig, AMSSession, Task
+from repro.data.video import OracleTeacher, SyntheticVideo, VideoConfig
+from repro.models.seg.student import SegConfig, make_student, seg_loss
+from repro.sim.seg_world import SegWorld, phi_pixel_loss
+
+
+@pytest.fixture(scope="module")
+def world():
+    vcfg = VideoConfig(height=32, width=32, fps=4.0, duration=40.0, seed=3)
+    return SegWorld.make(vcfg)
+
+
+def test_ams_session_trains_and_streams(world):
+    params = make_student(world.seg_cfg, jax.random.PRNGKey(0))
+    cfg = AMSConfig(t_update=5.0, t_horizon=20.0, k_iters=4, batch_size=4, gamma=0.05)
+    task = Task(loss_and_grad=world.loss_and_grad, teacher=None, phi_loss=phi_pixel_loss)
+    sess = AMSSession(task, cfg, params, seed=0)
+
+    # feed 8 labeled frames, run two phases
+    frames = [world.video.frame(i)[0] for i in range(8)]
+    labels = [world.teacher.label(i) for i in range(8)]
+    sess.receive_labeled(np.stack(frames[:4]), np.stack(labels[:4]), t_now=4.0)
+    d1 = sess.train_phase(5.0)
+    sess.receive_labeled(np.stack(frames[4:]), np.stack(labels[4:]), t_now=9.0)
+    d2 = sess.train_phase(10.0)
+
+    assert d1 is not None and d2 is not None
+    assert sess.phase == 2
+    # sparse update: ~gamma of params at fp16 + gzip'd bitmask
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    assert d1.values.size == pytest.approx(cfg.gamma * n, rel=0.15)
+    assert d1.value_bytes == d1.values.size * 2
+    assert 0 < d1.mask_bytes < n / 8  # gzip'd bit-vector beats raw bits
+
+    # client applies deltas and converges toward server params (fp16 rounding)
+    client = apply_delta(apply_delta(params, d1), d2)
+    sp = np.concatenate([np.ravel(l) for l in jax.tree.leaves(sess.params)])
+    cp = np.concatenate([np.ravel(l) for l in jax.tree.leaves(client)])
+    np.testing.assert_allclose(cp, sp, atol=2e-3)
+
+    # loss on the buffered window decreased vs the initial model
+    fr, lb = np.stack(frames), np.stack(labels)
+    l0, _ = world.loss_and_grad(params, fr, lb)
+    l1, _ = world.loss_and_grad(sess.params, fr, lb)
+    assert float(l1) < float(l0)
+
+
+def test_masked_update_touches_only_masked_coords(world):
+    """Coordinates outside I_n must not move (Algorithm 2 line 13)."""
+    params = make_student(world.seg_cfg, jax.random.PRNGKey(1))
+    cfg = AMSConfig(t_update=5.0, t_horizon=20.0, k_iters=3, batch_size=2, gamma=0.05,
+                    strategy="random")
+    task = Task(loss_and_grad=world.loss_and_grad, teacher=None, phi_loss=phi_pixel_loss)
+    sess = AMSSession(task, cfg, params, seed=0)
+    frames = np.stack([world.video.frame(i)[0] for i in range(4)])
+    labels = np.stack([world.teacher.label(i) for i in range(4)])
+    sess.receive_labeled(frames, labels, t_now=1.0)
+    mask = sess._select_mask()
+    # run the phase manually with the captured mask
+    from repro.core.masked_adam import masked_adam_update
+
+    p, opt = params, sess.opt_state
+    for _ in range(3):
+        b = sess.buffer.sample(sess.rng, 2, 2.0)
+        _, g = world.loss_and_grad(p, *b)
+        p, opt, _ = masked_adam_update(p, g, opt, mask, lr=1e-3)
+    for leaf0, leaf1, m in zip(jax.tree.leaves(params), jax.tree.leaves(p),
+                               jax.tree.leaves(mask)):
+        unmasked = ~np.asarray(m)
+        np.testing.assert_array_equal(np.asarray(leaf0)[unmasked],
+                                      np.asarray(leaf1)[unmasked])

@@ -1,0 +1,52 @@
+"""Learned teacher + the decode_ep/moe_shard sharding rule variants."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke
+from repro.data.video import SyntheticVideo, VideoConfig
+from repro.launch.mesh import make_local_mesh
+from repro.launch.shardings import rules_for
+from repro.metrics.miou import miou
+from repro.models.seg.teacher import train_teacher
+
+
+def test_learned_teacher_beats_chance():
+    v = SyntheticVideo(VideoConfig(height=32, width=32, fps=2.0, duration=30.0,
+                                   seed=9, n_classes=4))
+    teacher = train_teacher(v, 4, steps=120, batch=6)
+    scores = [miou(teacher.label(i), v.frame(i)[1], 4) for i in range(0, 50, 10)]
+    assert np.mean(scores) > 0.45  # far above the ~0.1 chance level
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    class devices:  # noqa: D106 - shape-only stand-in
+        shape = (16, 16)
+
+
+@pytest.mark.parametrize("arch", ["llama4_maverick_400b_a17b", "moonshot_v1_16b_a3b"])
+def test_decode_ep_rules_drop_data_from_weights(arch):
+    cfg = get_config(arch)
+    rules = rules_for(cfg, _FakeMesh(), shape_kind="decode_long", decode_ep=True)
+    assert rules["embed"] is None
+    assert rules["expert_embed"] is None
+    assert rules["expert_ff"] == ("data",)
+    # baseline keeps FSDP
+    base = rules_for(cfg, _FakeMesh(), shape_kind="decode_long")
+    assert base["embed"] == ("data",)
+
+
+def test_decode_ep_not_applied_when_experts_indivisible():
+    cfg = get_config("mixtral_8x22b")  # E=8 on a 16-way model axis
+    rules = rules_for(cfg, _FakeMesh(), shape_kind="decode_long", decode_ep=True)
+    assert rules["embed"] == ("data",)  # fell through to the default path
+
+
+def test_moe_shard_ep_tp_gated_on_topk():
+    coarse = get_config("llama4_maverick_400b_a17b")  # top-1
+    fine = get_config("moonshot_v1_16b_a3b")  # top-6
+    rc = rules_for(coarse, _FakeMesh(), shape_kind="train", moe_shard=True)
+    rf = rules_for(fine, _FakeMesh(), shape_kind="train", moe_shard=True)
+    assert rc["expert_ff"] == ("data",) and rc["expert_embed"] is None
+    assert rf["expert_embed"] == rf["embed"]  # fine-grained keeps the default

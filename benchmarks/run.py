@@ -14,7 +14,7 @@ import time
 import traceback
 
 ALL = ("table1", "fig5", "table3", "fig3", "fig4", "fig6", "fig8",
-       "ablation_teacher", "kernels", "roofline")
+       "serving_scale", "ablation_teacher", "kernels", "roofline")
 
 
 def main(argv=None) -> None:
@@ -47,6 +47,7 @@ def main(argv=None) -> None:
     for name, mod in (("table3", "table3_selection"), ("fig3", "fig3_asr"),
                       ("fig4", "fig4_bw_sweep"), ("fig6", "fig6_multiclient"),
                       ("fig8", "fig8_horizon"),
+                      ("serving_scale", "serving_scale"),
                       ("ablation_teacher", "ablation_teacher"),
                       ("kernels", "kernels_bench"),
                       ("roofline", "roofline_report")):

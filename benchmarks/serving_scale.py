@@ -1,0 +1,86 @@
+"""Serving-engine scale: push client count and measure the runtime itself.
+
+Uses compute-free `StubSession`s (modeled GPU/network timing, no JAX math)
+so the numbers are pure engine throughput: events/sec, GPU utilization,
+deferral rate, and per-client Kbps as one GPU saturates under 4 -> 64
+clients. ``--smoke`` is the CI entry point (small counts, short horizon).
+
+Run: PYTHONPATH=src python -m benchmarks.serving_scale [--smoke] [--policy gain]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import Timer, emit
+from repro.core.scheduler import GPUCostModel
+from repro.serving import (
+    ClientNetwork,
+    LinkSpec,
+    ServingConfig,
+    ServingEngine,
+    StubSession,
+)
+
+
+def make_stub_fleet(n: int, *, stationary_frac: float = 0.3,
+                    link: LinkSpec | None = None) -> list[StubSession]:
+    """A mixed fleet: the head of the list is near-static (low sampling rate,
+    slow decay), the rest dynamic — the same shape as the seg sweeps."""
+    link = link or LinkSpec(up_kbps=500.0, down_kbps=2000.0)
+    fleet = []
+    for i in range(n):
+        static = i < int(stationary_frac * n)
+        fleet.append(StubSession(
+            i,
+            rate=0.15 if static else 1.0,
+            dynamics=0.0005 if static else 0.004,
+            net=ClientNetwork(link),
+        ))
+    return fleet
+
+
+def run(counts=None, duration: float | None = None, policy: str = "gain",
+        max_queue: int = 32, quick: bool = False) -> dict:
+    if counts is None:
+        counts = (4, 16) if quick else (4, 8, 16, 32, 64)
+    if duration is None:
+        duration = 60.0 if quick else 300.0
+    out = {}
+    for n in counts:
+        fleet = make_stub_fleet(n)
+        engine = ServingEngine(
+            fleet, policy=policy, cost=GPUCostModel(),
+            cfg=ServingConfig(duration=duration, max_queue=max_queue))
+        with Timer() as t:
+            r = engine.run()
+        out[n] = r
+        emit(f"serving_scale.{policy}.n{n}", t.us,
+             f"evps={r['events_per_sec']:.0f};events={r['events_processed']};"
+             f"gpu_util={r['gpu_utilization']:.2f};"
+             f"deferral_rate={r['deferral_rate']:.2f};"
+             f"drop={r['dropped_requests']};backlog={r['max_backlog']};"
+             f"up_kbps={r['mean_up_kbps']:.1f};"
+             f"down_kbps={r['mean_down_kbps']:.1f};"
+             f"miou={r['mean_miou']:.3f}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: 2 counts, short horizon")
+    ap.add_argument("--policy", default="gain",
+                    choices=("fair", "edf", "gain"))
+    ap.add_argument("--duration", type=float, default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        out = run(duration=args.duration, policy=args.policy, quick=True)
+        assert all(r["events_processed"] > 0 for r in out.values())
+        assert all(r["mean_up_kbps"] > 0 for r in out.values())
+        print("serving_scale smoke OK")
+    else:
+        run(duration=args.duration, policy=args.policy)
+
+
+if __name__ == "__main__":
+    main()

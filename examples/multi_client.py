@@ -1,15 +1,16 @@
-"""Multiple edge devices sharing one server GPU (Appendix E).
+"""Multiple edge devices sharing one server GPU (Appendix E), on the
+event-driven serving runtime: pick a GPU policy and a link profile and watch
+per-client accuracy, bandwidth, and delta staleness.
 
-Run:  PYTHONPATH=src python examples/multi_client.py --clients 4
+Run:  PYTHONPATH=src python examples/multi_client.py --clients 4 --policy gain
 """
 import argparse
 
-import jax
-
 from repro.core.server import AMSConfig
+from repro.models.seg.student import SegConfig
+from repro.serving import LinkSpec
 from repro.sim.multiclient import run_multiclient
 from repro.sim.seg_world import pretrain_student
-from repro.models.seg.student import SegConfig
 
 
 def main():
@@ -17,6 +18,9 @@ def main():
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--duration", type=float, default=90.0)
     ap.add_argument("--atr", action="store_true")
+    ap.add_argument("--policy", default="fair", choices=("fair", "edf", "gain"))
+    ap.add_argument("--up-kbps", type=float, default=1000.0)
+    ap.add_argument("--down-kbps", type=float, default=2000.0)
     args = ap.parse_args()
 
     seg_cfg = SegConfig(n_classes=5)
@@ -25,12 +29,21 @@ def main():
     ams = AMSConfig(t_update=10.0, t_horizon=60.0, k_iters=12, batch_size=6,
                     gamma=0.05, lr=2e-3, phi_target=0.15, asr_eta=1.0, atr_enabled=args.atr)
     out = run_multiclient(args.clients, pre, seg_cfg, ams, duration=args.duration,
-                          video_kw=dict(height=48, width=48, fps=4.0))
-    print(f"clients={out['n_clients']} mean mIoU={out['mean_miou']:.3f} "
-          f"gpu_util={out['gpu_utilization']:.2f} served={out['phases_served']} "
-          f"deferred={out['phases_deferred']}")
-    for i, m in enumerate(out["miou_per_client"]):
-        print(f"  client {i}: mIoU {m:.3f}")
+                          video_kw=dict(height=48, width=48, fps=4.0),
+                          policy=args.policy,
+                          link=LinkSpec(up_kbps=args.up_kbps, down_kbps=args.down_kbps))
+    print(f"clients={out['n_clients']} policy={out['scheduler']} "
+          f"mean mIoU={out['mean_miou']:.3f} gpu_util={out['gpu_utilization']:.2f} "
+          f"served={out['phases_served']} deferred={out['phases_deferred']} "
+          f"dropped={out['dropped_requests']}")
+    print(f"delta latency: mean={out['delta_latency_mean_s']*1e3:.0f} ms "
+          f"max={out['delta_latency_max_s']*1e3:.0f} ms; "
+          f"events={out['events_processed']} ({out['events_per_sec']:.0f}/s)")
+    for i, (m, (up, down), ph) in enumerate(zip(out["miou_per_client"],
+                                                out["per_client_kbps"],
+                                                out["phases_per_client"])):
+        print(f"  client {i}: mIoU {m:.3f}  up {up:.0f} Kbps  down {down:.0f} Kbps  "
+              f"phases {ph}")
 
 
 if __name__ == "__main__":

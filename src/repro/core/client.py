@@ -5,9 +5,6 @@ from __future__ import annotations
 
 from typing import Callable
 
-import jax
-import numpy as np
-
 from repro.core.delta import ModelDelta, apply_delta
 
 
@@ -15,16 +12,18 @@ class EdgeClient:
     def __init__(self, predict_fn: Callable, params0):
         self._predict = predict_fn
         self.active = params0
-        self.inactive = jax.tree.map(lambda x: x, params0)
+        self.inactive = params0
         self.updates_applied = 0
 
     def apply_update(self, delta: ModelDelta) -> None:
-        """Apply to the inactive copy, then swap (never blocks inference)."""
-        self.inactive = apply_delta(self.inactive, delta)
-        self.active, self.inactive = self.inactive, self.active
-        # fold the same update into the now-inactive copy so both replicas
-        # converge (the paper keeps two full copies in memory)
-        self.inactive = jax.tree.map(lambda a: a, self.active)
+        """Build the updated tree off to the side, then swap it in with one
+        atomic assignment — inference never sees a half-applied update.
+        apply_delta is functional over immutable jax arrays, so the
+        "inactive buffer" is simply the new tree under construction and both
+        replicas converge by aliasing: one delta decode per update, no deep
+        copies (real deployments pay the second buffer in device memory,
+        which this functional sim doesn't model)."""
+        self.active = self.inactive = apply_delta(self.active, delta)
         self.updates_applied += 1
 
     def infer(self, frame):

@@ -27,6 +27,7 @@ class ASRController:
     r_max: float = 1.0
     delta_t: float = 10.0  # seconds between rate updates
     rate: float = field(default=0.0)
+    phi_ema: float = field(default=-1.0)  # recent-φ EMA; <0 until first observe
     _phis: list = field(default_factory=list)
     _last_update: float = 0.0
 
@@ -35,7 +36,12 @@ class ASRController:
             self.rate = self.r_max
 
     def observe(self, phi: float) -> None:
-        self._phis.append(float(phi))
+        phi = float(phi)
+        self._phis.append(phi)
+        # fast scene-dynamics signal for schedulers: unlike `rate` (integral
+        # controller, lags by design) this separates static from dynamic
+        # feeds within a few observations
+        self.phi_ema = phi if self.phi_ema < 0 else 0.8 * self.phi_ema + 0.2 * phi
 
     def maybe_update(self, t_now: float) -> float:
         """Apply Eq. 1 every delta_t seconds; returns the current rate."""

@@ -8,34 +8,95 @@ iterations per phase)."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Iterable
 
 
 @dataclass(frozen=True)
 class GPUCostModel:
     teacher_infer_s: float = 0.25  # per frame (paper: 200-300 ms on V100)
     train_iter_s: float = 0.05  # per student minibatch iteration
+    # cross-client batched labeling (serving runtime): one launch labels the
+    # whole backlog, amortizing per-frame cost to a fraction of the solo rate
+    label_batch_overhead_s: float = 0.05
+    label_batch_discount: float = 0.5
+
     @property
     def phase_s(self) -> float:  # K=20 iterations
         return 20 * self.train_iter_s
 
+    def phase_cost_s(self, n_frames: int, k_iters: int) -> float:
+        return n_frames * self.teacher_infer_s + k_iters * self.train_iter_s
+
+    def label_batch_s(self, n_frames: int) -> float:
+        if n_frames <= 0:
+            return 0.0
+        return (self.label_batch_overhead_s
+                + n_frames * self.teacher_infer_s * self.label_batch_discount)
+
+
+def next_in_turn(waiting: Iterable[int], turn: int, n_clients: int) -> int | None:
+    """The round-robin successor: among ``waiting`` client ids, the first one
+    at or after the ``turn`` pointer (mod n). Shared by RoundRobinScheduler
+    and the serving engine's fair policy so both implement the same order."""
+    waiting = list(waiting)
+    if not waiting:
+        return None
+    n = max(n_clients, max(waiting) + 1, 1)
+    return min(waiting, key=lambda c: ((c - turn) % n, c))
+
 
 @dataclass
 class RoundRobinScheduler:
+    """Busy-clock scheduler for polling callers (the legacy tick-loop
+    style). The event-driven serving engine does not use this class — its
+    fair policy is `serving.policies.FairRoundRobin` — but both derive
+    their turn order from `next_in_turn` above, so the ring semantics
+    cannot silently diverge."""
+
     cost: GPUCostModel = field(default_factory=GPUCostModel)
     gpu_free_at: float = 0.0
     turn: int = 0
+    n_clients: int = 0
+    waiting_timeout: float = 5.0  # s without re-polling before a waiter is dropped
     # telemetry
     busy_s: float = 0.0
     served: int = 0
     deferred: int = 0
+    _waiting: dict = field(default_factory=dict)  # client id -> last poll time
 
-    def try_acquire(self, t_now: float, n_frames: int, k_iters: int) -> bool:
+    def try_acquire(self, t_now: float, n_frames: int, k_iters: int,
+                    client: int | None = None) -> bool:
         """One session's turn: label n_frames + run a training phase.
-        Returns False (deferred) if the GPU is still busy."""
+
+        With a ``client`` id, grants are round-robin over the clients
+        currently asking: the GPU goes to the waiting client closest after
+        the ``turn`` pointer, and the pointer advances past each grant — so
+        poll order cannot starve late-indexed clients. Clients that never ask
+        are skipped rather than holding the ring, and a waiter that stops
+        re-polling (crash, disconnect) is expired after ``waiting_timeout``
+        so it cannot block everyone else's grants forever. Without an id
+        (legacy single-queue callers), any request is granted when the GPU
+        is free. Returns False (deferred) if the GPU is busy or it isn't
+        our turn."""
+        if client is not None:
+            self.n_clients = max(self.n_clients, client + 1)
+            self._waiting[client] = t_now  # refresh liveness on every poll
         if t_now < self.gpu_free_at:
             self.deferred += 1
             return False
-        dur = n_frames * self.cost.teacher_infer_s + k_iters * self.cost.train_iter_s
+        if client is not None:
+            for c, last_poll in list(self._waiting.items()):
+                if t_now - last_poll > self.waiting_timeout:
+                    del self._waiting[c]
+            nxt = next_in_turn(self._waiting, self.turn, self.n_clients)
+            if nxt != client:
+                self.deferred += 1
+                return False
+            del self._waiting[client]
+            # unwrapped on purpose: next_in_turn reduces mod the *current*
+            # client count, which may still be growing at this point
+            self.turn = client + 1
+        dur = self.cost.phase_cost_s(n_frames, k_iters)
         self.gpu_free_at = max(self.gpu_free_at, t_now) + dur
         self.busy_s += dur
         self.served += 1

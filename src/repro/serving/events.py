@@ -1,0 +1,55 @@
+"""Discrete-event core: a priority queue keyed on simulation time.
+
+No per-frame ticking — every state change in the serving runtime (a frame
+sampled on a device, a byte landing at the server, the GPU freeing up, a
+delta arriving at an edge) is an `Event` popped in time order. Ties are
+broken by insertion sequence, so runs are bit-for-bit deterministic
+regardless of how many events share a timestamp.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Any
+
+
+@dataclass(frozen=True)
+class Event:
+    time: float
+    seq: int  # insertion order; the FIFO tie-break at equal times
+    kind: str
+    client: int | None = None
+    payload: Any = None
+
+
+class EventQueue:
+    """Min-heap of events ordered by (time, seq)."""
+
+    def __init__(self):
+        self._heap: list[tuple[float, int, Event]] = []
+        self._seq = 0
+        self.pushed = 0
+        self.popped = 0
+
+    def push(self, time: float, kind: str, client: int | None = None,
+             payload: Any = None) -> Event:
+        ev = Event(time=float(time), seq=self._seq, kind=kind,
+                   client=client, payload=payload)
+        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        self._seq += 1
+        self.pushed += 1
+        return ev
+
+    def pop(self) -> Event:
+        _, _, ev = heapq.heappop(self._heap)
+        self.popped += 1
+        return ev
+
+    def peek_time(self) -> float | None:
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

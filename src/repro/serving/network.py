@@ -1,0 +1,73 @@
+"""Modeled client<->server network (§3.2 uplink / §3.1.2 downlink).
+
+Each client owns two half-duplex `Link`s (uplink for frame batches, downlink
+for `ModelDelta`s). A transfer occupies its link for ``bytes * 8 / rate``
+seconds — concurrent sends on the same link serialize — then lands after a
+propagation delay. Every byte is also charged to the client's
+`BandwidthLedger`, so per-client Kbps falls out of the same accounting the
+single-client benchmarks use. With finite rates, deltas arrive *stale*: the
+server's weights have moved on by the time an edge applies them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.bandwidth import BandwidthLedger
+
+
+@dataclass(frozen=True)
+class LinkSpec:
+    """Per-client provisioning. Defaults sit near the paper's operating
+    points: a few-hundred-Kbps video uplink, a Mbps-class downlink."""
+
+    up_kbps: float = 1000.0
+    down_kbps: float = 2000.0
+    prop_delay_s: float = 0.05
+
+
+@dataclass
+class Link:
+    """One direction of a client's pipe: rate limit + propagation delay."""
+
+    rate_kbps: float
+    prop_delay_s: float = 0.0
+    busy_until: float = 0.0
+    bytes_carried: int = 0
+    transfers: int = 0
+
+    def tx_seconds(self, nbytes: int) -> float:
+        if self.rate_kbps <= 0:  # unmodeled link: instantaneous
+            return 0.0
+        return nbytes * 8.0 / (self.rate_kbps * 1e3)
+
+    def transfer(self, t_now: float, nbytes: int) -> float:
+        """Occupy the link starting no earlier than ``t_now``; returns the
+        arrival time at the far end."""
+        start = max(t_now, self.busy_until)
+        self.busy_until = start + self.tx_seconds(nbytes)
+        self.bytes_carried += int(nbytes)
+        self.transfers += 1
+        return self.busy_until + self.prop_delay_s
+
+
+@dataclass
+class ClientNetwork:
+    """Both directions for one client, wired into its bandwidth ledger."""
+
+    spec: LinkSpec = field(default_factory=LinkSpec)
+    ledger: BandwidthLedger = field(default_factory=BandwidthLedger)
+
+    def __post_init__(self):
+        self.up = Link(self.spec.up_kbps, self.spec.prop_delay_s)
+        self.down = Link(self.spec.down_kbps, self.spec.prop_delay_s)
+
+    def send_up(self, t_now: float, nbytes: int, what: str = "frames") -> float:
+        self.ledger.uplink(nbytes, t_now, what)
+        return self.up.transfer(t_now, nbytes)
+
+    def send_down(self, t_now: float, nbytes: int, what: str = "delta") -> float:
+        self.ledger.downlink(nbytes, t_now, what)
+        return self.down.transfer(t_now, nbytes)
+
+    def kbps(self, duration_s: float) -> tuple[float, float]:
+        return self.ledger.kbps(duration_s)

@@ -1,0 +1,112 @@
+"""Pluggable GPU scheduling policies for the serving engine.
+
+A policy answers one question: the GPU just went idle and several sessions
+have work queued — who goes next? Three answers:
+
+* `FairRoundRobin` — the paper's Appendix E strategy: a rotating turn
+  pointer over waiting sessions (shares `next_in_turn` with
+  `core.scheduler.RoundRobinScheduler`).
+* `EarliestDeadlineFirst` — each request carries a deadline (its session's
+  next T_update boundary); the most overdue phase runs first.
+* `GainAware` — ATR-style cycle reclamation generalized to the scheduler:
+  rank sessions by recent scene dynamics (the ASR φ-signal, via sampling
+  rate) times staleness, so dynamic feeds preempt near-static ones while a
+  growing staleness term keeps static feeds from starving outright.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.scheduler import next_in_turn
+
+
+@dataclass
+class GPURequest:
+    """A queued "label my backlog + run one training phase" request."""
+
+    client: int
+    t_request: float  # when the request became ready at the server
+    n_frames: int  # unlabeled frames riding along
+    k_iters: int
+    deadline: float  # t_request + the session's current T_update
+    phi: float  # recent φ-score signal (~0 static feed, ~1+ dynamic)
+    t_update: float  # session's current update period (ATR-stretched)
+
+
+class SchedulingPolicy:
+    name = "base"
+
+    def pick(self, t_now: float, ready: list[GPURequest]) -> GPURequest:
+        raise NotImplementedError
+
+    def evict(self, t_now: float, overfull: list[GPURequest]) -> GPURequest:
+        """Saturation: the backlog is over capacity; choose the request to
+        drop. Default drops the newest arrival (tail drop)."""
+        return max(overfull, key=lambda r: (r.t_request, r.client))
+
+
+class FairRoundRobin(SchedulingPolicy):
+    name = "fair"
+
+    def __init__(self):
+        self.turn = 0
+        self.n_clients = 0
+
+    def pick(self, t_now: float, ready: list[GPURequest]) -> GPURequest:
+        self.n_clients = max([self.n_clients] + [r.client + 1 for r in ready])
+        nxt = next_in_turn([r.client for r in ready], self.turn, self.n_clients)
+        # unwrapped on purpose: next_in_turn reduces mod the current count,
+        # which grows as later-indexed clients issue their first requests
+        self.turn = nxt + 1
+        return next(r for r in ready if r.client == nxt)
+
+
+class EarliestDeadlineFirst(SchedulingPolicy):
+    name = "edf"
+
+    def pick(self, t_now: float, ready: list[GPURequest]) -> GPURequest:
+        return min(ready, key=lambda r: (r.deadline, r.client))
+
+
+@dataclass
+class GainAware(SchedulingPolicy):
+    """score = recent φ-signal + staleness_weight * waited / T_update.
+
+    The first term routes cycles to dynamic scenes (where a training phase
+    buys the most accuracy); the second grows linearly while a request sits
+    queued, so even a frozen feed is served after a bounded wait — the same
+    reclamation/backstop structure as ATR's slowdown mode. Under saturation
+    the same score drives eviction: a static feed's queued request is the
+    one sacrificed, not whichever arrival happened to find the queue full."""
+
+    staleness_weight: float = 0.5
+    name: str = field(default="gain", init=False)
+
+    def _score(self, t_now: float, r: GPURequest) -> float:
+        waited = max(t_now - r.t_request, 0.0)
+        return r.phi + self.staleness_weight * waited / max(r.t_update, 1e-9)
+
+    def pick(self, t_now: float, ready: list[GPURequest]) -> GPURequest:
+        # max score; ties broken by client id for determinism
+        return max(ready, key=lambda r: (self._score(t_now, r), -r.client))
+
+    def evict(self, t_now: float, overfull: list[GPURequest]) -> GPURequest:
+        return min(overfull, key=lambda r: (self._score(t_now, r), r.client))
+
+
+POLICIES = {
+    "fair": FairRoundRobin,
+    "edf": EarliestDeadlineFirst,
+    "gain": GainAware,
+}
+
+
+def make_policy(name_or_policy) -> SchedulingPolicy:
+    if isinstance(name_or_policy, SchedulingPolicy):
+        return name_or_policy
+    try:
+        return POLICIES[name_or_policy]()
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduling policy {name_or_policy!r}; "
+            f"choose from {sorted(POLICIES)}") from None

@@ -1,0 +1,178 @@
+"""Session adapters: what the serving engine needs from one client.
+
+The engine is deliberately ignorant of JAX, video, and segmentation — it
+schedules opaque sessions through a small duck-typed surface:
+
+  edge side   : ``sampling_rate``, ``eval_interval_s``, ``capture(t)``,
+                ``take_outbox()``, ``upload_bytes(n)``, ``evaluate(t)``,
+                ``apply_delta(delta, t_sent, t_now)``
+  server side : ``t_update``, ``k_iters``, ``label_and_ingest(idxs, t)``,
+                ``train(t) -> delta | None`` (delta needs ``.total_bytes``)
+
+`SessionBase` holds the shared edge-side plumbing (outbox, network,
+telemetry). `SegServingSession` binds the real pipeline (SegWorld +
+AMSSession + double-buffered EdgeClient). `StubSession` is a compute-free
+stand-in with identical timing/byte behaviour, used to measure engine
+throughput at client counts where real training would drown the measurement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.core.client import EdgeClient
+from repro.core.server import AMSSession
+from repro.data import codec
+from repro.metrics.miou import miou
+from repro.serving.network import ClientNetwork, LinkSpec
+
+
+class SessionBase:
+    """Edge-side plumbing shared by every session flavor: the device outbox,
+    the per-client network, and the telemetry the engine reads. Subclasses
+    add the actual compute (or a model of it)."""
+
+    def __init__(self, idx: int, net: ClientNetwork | None = None):
+        self.idx = idx
+        self.net = net or ClientNetwork(LinkSpec())
+        self._outbox: list[int] = []  # sampled frame indices awaiting upload
+        self.admitted = True
+        # telemetry
+        self.mious: list[float] = []
+        self.delta_latencies: list[float] = []
+        self.phases = 0
+
+    def take_outbox(self) -> list[int]:
+        out, self._outbox = self._outbox, []
+        return out
+
+
+class SegServingSession(SessionBase):
+    """One edge device streaming a `SegWorld` video through a real
+    `AMSSession`, with client-side weights held in an `EdgeClient` (so deltas
+    land in the inactive replica and swap — never blocking inference)."""
+
+    def __init__(self, idx: int, world, session: AMSSession, params0,
+                 net: ClientNetwork | None = None, eval_stride: int = 6):
+        super().__init__(idx, net)
+        self.world = world
+        self.session = session
+        self.edge = EdgeClient(world.predict, jax.tree.map(lambda x: x, params0))
+        self.fps = world.video.cfg.fps
+        self.eval_interval_s = eval_stride / self.fps
+        self._n_pixels = world.video.cfg.height * world.video.cfg.width
+
+    # ---- edge side -----------------------------------------------------
+    @property
+    def sampling_rate(self) -> float:
+        return self.session.sampling_rate
+
+    @property
+    def phi_signal(self) -> float:
+        """Recent φ relative to the ASR target: ~0 for a frozen feed, ~1 at
+        the controller's set point, >1 while the scene outruns it."""
+        ema = self.session.asr.phi_ema
+        if ema < 0:  # nothing observed yet: assume dynamic (serve eagerly)
+            return 1.0
+        return ema / max(self.session.asr.phi_target, 1e-9)
+
+    def capture(self, t: float) -> None:
+        idx = min(int(t * self.fps), self.world.video.cfg.n_frames - 1)
+        self._outbox.append(idx)
+
+    def upload_bytes(self, n_frames: int) -> int:
+        """H.264 two-pass over the T_update buffer (paper §3.2) + a small
+        control message so even an empty upload asks for a phase."""
+        return 256 + codec.h264_buffer_bytes(n_frames, self._n_pixels,
+                                             self.t_update)
+
+    def evaluate(self, t: float) -> None:
+        idx = min(int(t * self.fps), self.world.video.cfg.n_frames - 1)
+        img, _ = self.world.video.frame(idx)
+        tlabel = self.world.teacher.label(idx)
+        pred = np.asarray(self.edge.infer(img[None])[0])
+        self.mious.append(miou(pred, tlabel, self.world.video.cfg.n_classes))
+
+    def apply_delta(self, delta, t_sent: float, t_now: float) -> None:
+        self.edge.apply_update(delta)
+        self.delta_latencies.append(t_now - t_sent)
+
+    # ---- server side ---------------------------------------------------
+    @property
+    def t_update(self) -> float:
+        return self.session.t_update
+
+    @property
+    def k_iters(self) -> int:
+        return self.session.cfg.k_iters
+
+    def label_and_ingest(self, idxs: list[int], t: float) -> None:
+        if not idxs:
+            return
+        frames = np.stack([self.world.video.frame(i)[0] for i in idxs])
+        labels = np.stack([self.world.teacher.label(i) for i in idxs])
+        self.session.receive_labeled(frames, labels, t)
+
+    def train(self, t: float):
+        delta = self.session.train_phase(t)
+        if delta is not None:
+            self.phases += 1
+        return delta
+
+
+@dataclass
+class StubDelta:
+    total_bytes: int
+
+
+class StubSession(SessionBase):
+    """Compute-free session with the same surface and modeled byte sizes.
+
+    Accuracy is a deterministic freshness curve: mIoU decays linearly with
+    the age of the client's weights at a per-session ``dynamics`` rate, so
+    scheduler quality still shows up in the aggregate numbers while a single
+    event costs microseconds — this is what lets `serving_scale` push client
+    counts into the dozens and report engine events/sec rather than JAX time.
+    """
+
+    def __init__(self, idx: int, *, fps: float = 4.0, t_update: float = 10.0,
+                 k_iters: int = 20, rate: float = 1.0, dynamics: float = 0.01,
+                 frame_bytes: int = 7000, delta_bytes: int = 20_000,
+                 eval_stride: int = 6, net: ClientNetwork | None = None):
+        super().__init__(idx, net)
+        self.fps = fps
+        self.sampling_rate = rate
+        self.phi_signal = rate  # stubs: the configured rate IS the dynamics
+        self.eval_interval_s = eval_stride / fps
+        self.t_update = t_update
+        self.k_iters = k_iters
+        self.dynamics = dynamics  # mIoU lost per second of weight staleness
+        self._frame_bytes = frame_bytes
+        self._delta_bytes = delta_bytes
+        self._ingested = 0
+        self._last_update_t = 0.0
+
+    def capture(self, t: float) -> None:
+        self._outbox.append(int(t * self.fps))
+
+    def upload_bytes(self, n_frames: int) -> int:
+        return 256 + n_frames * self._frame_bytes
+
+    def evaluate(self, t: float) -> None:
+        staleness = t - self._last_update_t
+        self.mious.append(max(0.2, 0.9 - self.dynamics * staleness))
+
+    def apply_delta(self, delta, t_sent: float, t_now: float) -> None:
+        self._last_update_t = t_now
+        self.delta_latencies.append(t_now - t_sent)
+
+    def label_and_ingest(self, idxs: list[int], t: float) -> None:
+        self._ingested += len(idxs)
+
+    def train(self, t: float):
+        if self._ingested == 0:
+            return None
+        self.phases += 1
+        return StubDelta(total_bytes=self._delta_bytes)

@@ -1,37 +1,64 @@
 """Multiple edge devices sharing one server GPU (Appendix E, Fig. 6/10).
 
-Each client streams its own video; the server round-robins labeling +
-training phases. When the GPU saturates, phases are deferred — effective
-T_update grows and dynamic videos lose accuracy. ATR (Appendix D) frees
-cycles on stationary feeds, raising the supported-client count.
+Compatibility shim: `run_multiclient` keeps its seed-era signature and
+result-dict keys but now builds sessions for the event-driven runtime in
+`repro.serving` — so phases queue behind a modeled GPU, frame batches and
+deltas occupy rate-limited links (deltas arrive *stale*, never teleported),
+and the GPU policy is pluggable (``policy="fair" | "edf" | "gain"``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import dataclasses
 
 import jax
-import numpy as np
 
-from repro.core.scheduler import GPUCostModel, RoundRobinScheduler
+from repro.core.scheduler import GPUCostModel
 from repro.core.server import AMSConfig, AMSSession, Task
-from repro.data.video import SyntheticVideo, VideoConfig, stop_and_go
-from repro.metrics.miou import miou
+from repro.data.video import VideoConfig, stop_and_go
+from repro.serving import (
+    ClientNetwork,
+    LinkSpec,
+    SegServingSession,
+    ServingConfig,
+    ServingEngine,
+)
 from repro.sim.seg_world import SegWorld, phi_pixel_loss
 
 
-@dataclass
-class ClientState:
-    world: SegWorld
-    session: AMSSession
-    params: object  # client-side model
-    pending: list
-    next_sample_t: float = 0.0
-    next_upload_t: float = 10.0
-    mious: list = None
+def build_sessions(
+    n_clients: int,
+    pretrained,
+    seg_cfg,
+    ams_cfg: AMSConfig,
+    *,
+    duration: float = 120.0,
+    video_kw: dict | None = None,
+    eval_stride: int = 6,
+    stationary_frac: float = 0.3,
+    seed: int = 0,
+    link: LinkSpec | None = None,
+) -> list[SegServingSession]:
+    """N seg worlds -> serving sessions; the first ``stationary_frac`` of
+    clients watch near-static feeds (the ATR/gain-aware reclamation target)."""
+    video_kw = dict(video_kw or {})
+    video_kw.setdefault("duration", duration)
+    video_kw.setdefault("fps", 4.0)
+    link = link or LinkSpec()
 
-    def __post_init__(self):
-        if self.mious is None:
-            self.mious = []
+    sessions = []
+    for i in range(n_clients):
+        kw = dict(video_kw, seed=seed * 1000 + i)
+        if i < int(stationary_frac * n_clients):
+            kw["motion_schedule"] = stop_and_go(0.0, duration)  # near-static feed
+        world = SegWorld.make(VideoConfig(**kw), seg_cfg)
+        task = Task(loss_and_grad=world.loss_and_grad, teacher=None,
+                    phi_loss=phi_pixel_loss)
+        ams = AMSSession(task, ams_cfg, jax.tree.map(lambda x: x, pretrained),
+                         seed=i)
+        sessions.append(SegServingSession(
+            i, world, ams, pretrained, net=ClientNetwork(link),
+            eval_stride=eval_stride))
+    return sessions
 
 
 def run_multiclient(
@@ -46,60 +73,28 @@ def run_multiclient(
     eval_stride: int = 6,
     stationary_frac: float = 0.3,
     seed: int = 0,
+    policy: str = "fair",
+    link: LinkSpec | None = None,
+    serving_cfg: ServingConfig | None = None,
 ) -> dict:
-    """Returns mean mIoU across clients + scheduler telemetry."""
-    video_kw = dict(video_kw or {})
-    video_kw.setdefault("duration", duration)
-    fps = video_kw.get("fps", 4.0)
-    video_kw["fps"] = fps
+    """Returns mean mIoU across clients + scheduler/network telemetry.
 
-    clients = []
-    for i in range(n_clients):
-        kw = dict(video_kw, seed=seed * 1000 + i)
-        if i < int(stationary_frac * n_clients):
-            kw["motion_schedule"] = stop_and_go(0.0, duration)  # near-static feed
-        world = SegWorld.make(VideoConfig(**kw), seg_cfg)
-        task = Task(loss_and_grad=world.loss_and_grad, teacher=None, phi_loss=phi_pixel_loss)
-        session = AMSSession(task, ams_cfg, jax.tree.map(lambda x: x, pretrained), seed=i)
-        clients.append(ClientState(world=world, session=session,
-                                   params=jax.tree.map(lambda x: x, pretrained),
-                                   pending=[], next_upload_t=ams_cfg.t_update))
+    Seed-era keys (``n_clients``, ``miou_per_client``, ``mean_miou``,
+    ``gpu_utilization``, ``phases_served``, ``phases_deferred``) are
+    preserved; the engine adds per-client Kbps, delta latency, deferral-rate
+    and events/sec fields on top.
 
-    sched = RoundRobinScheduler(cost=cost or GPUCostModel())
-    n_frames = int(duration * fps)
-
-    for idx in range(n_frames):
-        t = idx / fps
-        for ci, c in enumerate(clients):
-            img, _ = c.world.video.frame(idx)
-            tlabel = c.world.teacher.label(idx)
-            if idx % eval_stride == 0:
-                pred = np.asarray(c.world.predict(c.params, img[None])[0])
-                c.mious.append(miou(pred, tlabel, c.world.video.cfg.n_classes))
-            # edge sampling
-            if t >= c.next_sample_t:
-                c.pending.append((img, tlabel))
-                c.next_sample_t = t + 1.0 / max(c.session.sampling_rate, 1e-6)
-            # server turn (round-robin: one session per scheduler grant)
-            if t >= c.next_upload_t:
-                if sched.try_acquire(t, len(c.pending), c.session.cfg.k_iters):
-                    if c.pending:
-                        c.session.receive_labeled(
-                            np.stack([f for f, _ in c.pending]),
-                            np.stack([l for _, l in c.pending]), t)
-                        c.pending.clear()
-                    delta = c.session.train_phase(t)
-                    if delta is not None:
-                        c.params = jax.tree.map(lambda x: x, c.session.params)
-                    c.next_upload_t = t + c.session.t_update
-                # else: deferred — retried next frame tick
-
-    per_client = [float(np.mean(c.mious)) for c in clients]
-    return {
-        "n_clients": n_clients,
-        "miou_per_client": per_client,
-        "mean_miou": float(np.mean(per_client)),
-        "gpu_utilization": sched.utilization(duration),
-        "phases_served": sched.served,
-        "phases_deferred": sched.deferred,
-    }
+    The ``duration`` kwarg governs the run: it sizes the videos AND the
+    engine horizon. A ``serving_cfg`` supplies the other engine knobs
+    (queue cap, admission, batching); its own ``duration`` is overridden so
+    clients can never be scored past the end of their streams."""
+    sessions = build_sessions(
+        n_clients, pretrained, seg_cfg, ams_cfg, duration=duration,
+        video_kw=video_kw, eval_stride=eval_stride,
+        stationary_frac=stationary_frac, seed=seed, link=link)
+    if serving_cfg is None:
+        cfg = ServingConfig(duration=duration)
+    else:
+        cfg = dataclasses.replace(serving_cfg, duration=duration)
+    engine = ServingEngine(sessions, policy=policy, cost=cost, cfg=cfg)
+    return engine.run()

@@ -1,0 +1,80 @@
+"""Optional-import shim for ``hypothesis``.
+
+Property tests import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly. When hypothesis is installed the real library is
+re-exported unchanged; when it is missing (this container does not ship it and
+cannot pip-install), a minimal fallback runs each property a handful of times
+with deterministic pseudo-random examples drawn from the declared strategies —
+enough to keep the invariants exercised and the suite collectable everywhere.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5  # examples per property when hypothesis is absent
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rnd: random.Random):
+            return self._draw(rnd)
+
+    class _St:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rnd: opts[rnd.randrange(len(opts))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rnd):
+                n = rnd.randint(min_size, max_size)
+                return [elements.example(rnd) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = _St()
+
+    def settings(**_kw):  # accepts and ignores max_examples/deadline/...
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # nullary wrapper; deliberately no functools.wraps — __wrapped__
+            # would make pytest read fn's params as fixture requests
+            def wrapper():
+                # deterministic per-test examples: seed from the test name
+                rnd = random.Random(fn.__name__)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    args = [s.example(rnd) for s in arg_strategies]
+                    kwargs = {k: s.example(rnd) for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

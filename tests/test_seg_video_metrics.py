@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # hypothesis, or a fallback when absent
 
 from repro.data.video import OracleTeacher, SyntheticVideo, VideoConfig, stop_and_go
 from repro.metrics.miou import confusion, miou

@@ -1,11 +1,15 @@
-"""Paper Fig. 6/10: accuracy degradation as clients share one server GPU.
+"""Paper Fig. 6/10: accuracy degradation as clients share the server GPUs.
 
-Two sweeps on the event-driven serving runtime (`repro.serving`):
+Three sweeps on the event-driven serving runtime (`repro.serving`):
   1. client count x ATR on/off under the fair policy (the seed's sweep);
   2. scheduler comparison (fair / EDF / gain-aware) at the saturating client
      count — the gain-aware policy reclaims cycles from near-static feeds,
      so it should match or beat fair round-robin on mean mIoU while the
-     network columns show real (nonzero-latency) delta delivery.
+     network columns show real (nonzero-latency) delta delivery;
+  3. GPU-count sweep — the saturating fleet doubled onto a 4-GPU pool,
+     affinity-blind (gain) vs residency-aware (affinity) placement: the
+     affinity policy avoids most weight-migration stalls, so it should beat
+     blind assignment on mean mIoU (or phases served) at n_gpus=4.
 """
 from __future__ import annotations
 
@@ -61,6 +65,21 @@ def run(quick: bool = True, duration: float = 100.0):
             t_us = t.us
         out[(policy, n_sat)] = r
         emit(f"fig6.sched.{policy}.n{n_sat}", t_us, _row(r))
+
+    # -- sweep 3: GPU pool, affinity-blind vs residency-aware -------------
+    n_pool = 2 * n_sat  # the 1-GPU saturating fleet, doubled onto 4 GPUs
+    for n_gpus, affinity in ((1, False), (4, False), (4, True)):
+        cfg = default_ams(asr_eta=2.0)
+        with Timer() as t:
+            r = run_multiclient(n_pool, pre, SEG_CFG, cfg, duration=duration,
+                                video_kw=video_kw, policy="gain",
+                                n_gpus=n_gpus, affinity=affinity)
+        out[("pool", n_gpus, affinity)] = r
+        tag = "affinity" if affinity else "blind"
+        emit(f"fig6.pool.g{n_gpus}.{tag}.n{n_pool}", t.us,
+             f"{_row(r)};served={r['phases_served']};"
+             f"migrations={r['migrations']};"
+             f"migration_s={r['migration_s_total']:.1f}")
     return out
 
 

@@ -1,15 +1,29 @@
-"""Serving-engine scale: push client count and measure the runtime itself.
+"""Serving-engine scale-out: sessions sustained per GPU as the pool grows.
 
 Uses compute-free `StubSession`s (modeled GPU/network timing, no JAX math)
-so the numbers are pure engine throughput: events/sec, GPU utilization,
-deferral rate, and per-client Kbps as one GPU saturates under 4 -> 64
-clients. ``--smoke`` is the CI entry point (small counts, short horizon).
+so the numbers are pure engine/scheduler behaviour. Two questions:
 
-Run: PYTHONPATH=src python -m benchmarks.serving_scale [--smoke] [--policy gain]
+  1. capacity — for each pool size, the largest fleet whose mean mIoU stays
+     at/above ``TARGET_MIOU`` (sessions sustained; the Appendix E scaling
+     argument made measurable);
+  2. placement — at the saturating fleet on 4 GPUs, does residency-aware
+     `AffinityAware` assignment beat the affinity-blind `GainAware` ranking
+     it shares a score with (migration time avoided -> phases + freshness)?
+
+Emits ``BENCH_serving.json`` (sessions sustained, sessions-per-GPU, the
+affinity comparison) next to the repo root so future PRs can track the
+trajectory. ``--smoke`` is the CI entry point: ``--smoke`` alone is the
+PR-1 single-GPU engine smoke; ``--smoke --gpus 4`` additionally asserts
+>=3x sustained-session scaling from 1 -> 4 GPUs under the fair policy and
+that affinity beats blind assignment.
+
+Run: PYTHONPATH=src python -m benchmarks.serving_scale [--smoke] [--gpus 4]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 from benchmarks.common import Timer, emit
 from repro.core.scheduler import GPUCostModel
@@ -20,6 +34,9 @@ from repro.serving import (
     ServingEngine,
     StubSession,
 )
+
+TARGET_MIOU = 0.84
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
 
 
 def make_stub_fleet(n: int, *, stationary_frac: float = 0.3,
@@ -39,8 +56,33 @@ def make_stub_fleet(n: int, *, stationary_frac: float = 0.3,
     return fleet
 
 
+def run_fleet(n: int, *, n_gpus: int = 1, policy: str = "fair",
+              duration: float = 240.0, max_queue: int = 32) -> dict:
+    engine = ServingEngine(
+        make_stub_fleet(n), policy=policy, cost=GPUCostModel(),
+        cfg=ServingConfig(duration=duration, max_queue=max_queue,
+                          n_gpus=n_gpus))
+    return engine.run()
+
+
+def sessions_sustained(n_gpus: int, *, policy: str = "fair",
+                       counts=(4, 8, 12, 16, 20, 24, 28, 32),
+                       duration: float = 240.0,
+                       target: float = TARGET_MIOU) -> tuple[int, dict]:
+    """Largest fleet in ``counts`` whose mean mIoU holds ``target`` on an
+    ``n_gpus`` pool (0 if even the smallest fleet degrades past it)."""
+    best, per_count = 0, {}
+    for n in counts:
+        r = run_fleet(n, n_gpus=n_gpus, policy=policy, duration=duration)
+        per_count[n] = r
+        if r["mean_miou"] >= target:
+            best = max(best, n)
+    return best, per_count
+
+
 def run(counts=None, duration: float | None = None, policy: str = "gain",
         max_queue: int = 32, quick: bool = False) -> dict:
+    """The PR-1 single-GPU engine sweep: events/sec + saturation telemetry."""
     if counts is None:
         counts = (4, 16) if quick else (4, 8, 16, 32, 64)
     if duration is None:
@@ -65,21 +107,97 @@ def run(counts=None, duration: float | None = None, policy: str = "gain",
     return out
 
 
+def run_pool_sweep(max_gpus: int = 4, *, counts=None, duration: float = 240.0,
+                   affinity_n: int = 24, mode: str = "full") -> dict:
+    """GPU-count sweep (sessions sustained vs pool size, fair policy) plus
+    the affinity-on/off comparison at ``affinity_n`` clients on the full
+    pool. Writes BENCH_serving.json."""
+    if counts is None:
+        counts = ((4, 8, 12, 24, 26) if mode == "smoke"
+                  else (4, 8, 12, 16, 20, 24, 26, 28, 32))
+    gpu_counts = sorted({1, max_gpus} | ({2} if max_gpus >= 4 else set()))
+    if mode == "smoke":
+        gpu_counts = [1, max_gpus]
+    sustained = {}
+    for ng in gpu_counts:
+        with Timer() as t:
+            best, per_count = sessions_sustained(ng, counts=counts,
+                                                 duration=duration)
+        sustained[ng] = best
+        peak = per_count[max(c for c in counts if c <= max(best, counts[0]))]
+        emit(f"serving_scale.pool.fair.g{ng}", t.us,
+             f"sustained={best};per_gpu={best / ng:.1f};"
+             f"target_miou={TARGET_MIOU};"
+             f"util_at_peak={peak['gpu_utilization']:.2f};"
+             f"migrations_at_peak={peak['migrations']}")
+
+    affinity_cmp = {}
+    for pol in ("gain", "affinity"):
+        with Timer() as t:
+            r = run_fleet(affinity_n, n_gpus=max_gpus, policy=pol,
+                          duration=duration)
+        affinity_cmp[pol] = {"mean_miou": r["mean_miou"],
+                             "phases_served": r["phases_served"],
+                             "migrations": r["migrations"],
+                             "migration_s_total": r["migration_s_total"]}
+        emit(f"serving_scale.affinity.{pol}.g{max_gpus}.n{affinity_n}", t.us,
+             f"miou={r['mean_miou']:.4f};served={r['phases_served']};"
+             f"migrations={r['migrations']};"
+             f"migration_s={r['migration_s_total']:.1f}")
+
+    bench = {
+        "mode": mode,
+        "target_miou": TARGET_MIOU,
+        "duration_s": duration,
+        "policy": "fair",
+        "sessions_sustained": {str(g): sustained[g] for g in sustained},
+        "sessions_per_gpu": {str(g): sustained[g] / g for g in sustained},
+        "affinity_at_max_gpus": {"n_clients": affinity_n,
+                                 "n_gpus": max_gpus, **affinity_cmp},
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(BENCH_PATH)}")
+    return bench
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI mode: 2 counts, short horizon")
     ap.add_argument("--policy", default="gain",
-                    choices=("fair", "edf", "gain"))
+                    choices=("fair", "edf", "gain", "affinity"))
+    ap.add_argument("--gpus", type=int, default=1,
+                    help="pool size; >1 runs the GPU-count sweep")
     ap.add_argument("--duration", type=float, default=None)
     args = ap.parse_args()
     if args.smoke:
-        out = run(duration=args.duration, policy=args.policy, quick=True)
-        assert all(r["events_processed"] > 0 for r in out.values())
-        assert all(r["mean_up_kbps"] > 0 for r in out.values())
+        if args.gpus <= 1:  # the pool smoke below is its own gate; don't
+            # repeat the single-GPU sweep ci.sh already ran separately
+            out = run(duration=args.duration, policy=args.policy, quick=True)
+            assert all(r["events_processed"] > 0 for r in out.values())
+            assert all(r["mean_up_kbps"] > 0 for r in out.values())
+        else:
+            bench = run_pool_sweep(args.gpus, mode="smoke")
+            s1 = bench["sessions_sustained"]["1"]
+            sg = bench["sessions_sustained"][str(args.gpus)]
+            assert s1 > 0, "1-GPU pool sustains nothing at the target mIoU"
+            assert sg >= 3 * s1, (
+                f"sustained sessions scaled {sg}/{s1} = {sg / max(s1, 1):.1f}x "
+                f"from 1 -> {args.gpus} GPUs; expected >= 3x")
+            aff = bench["affinity_at_max_gpus"]
+            assert (aff["affinity"]["mean_miou"] > aff["gain"]["mean_miou"]
+                    or aff["affinity"]["phases_served"]
+                    > aff["gain"]["phases_served"]), (
+                "affinity-aware placement should beat blind assignment")
+            print(f"serving_scale pool smoke OK "
+                  f"(sustained {s1} -> {sg} sessions, affinity beats blind)")
         print("serving_scale smoke OK")
     else:
         run(duration=args.duration, policy=args.policy)
+        if args.gpus > 1:
+            run_pool_sweep(args.gpus, duration=args.duration or 240.0)
 
 
 if __name__ == "__main__":

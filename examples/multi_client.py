@@ -18,7 +18,12 @@ def main():
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--duration", type=float, default=90.0)
     ap.add_argument("--atr", action="store_true")
-    ap.add_argument("--policy", default="fair", choices=("fair", "edf", "gain"))
+    ap.add_argument("--policy", default="fair",
+                    choices=("fair", "edf", "gain", "affinity"))
+    ap.add_argument("--gpus", type=int, default=1,
+                    help="server GPU pool size")
+    ap.add_argument("--affinity", action="store_true",
+                    help="residency-aware (session, gpu) placement")
     ap.add_argument("--up-kbps", type=float, default=1000.0)
     ap.add_argument("--down-kbps", type=float, default=2000.0)
     args = ap.parse_args()
@@ -30,20 +35,29 @@ def main():
                     gamma=0.05, lr=2e-3, phi_target=0.15, asr_eta=1.0, atr_enabled=args.atr)
     out = run_multiclient(args.clients, pre, seg_cfg, ams, duration=args.duration,
                           video_kw=dict(height=48, width=48, fps=4.0),
-                          policy=args.policy,
+                          policy=args.policy, n_gpus=args.gpus,
+                          affinity=args.affinity,
                           link=LinkSpec(up_kbps=args.up_kbps, down_kbps=args.down_kbps))
     print(f"clients={out['n_clients']} policy={out['scheduler']} "
+          f"gpus={out['n_gpus']} "
           f"mean mIoU={out['mean_miou']:.3f} gpu_util={out['gpu_utilization']:.2f} "
           f"served={out['phases_served']} deferred={out['phases_deferred']} "
           f"dropped={out['dropped_requests']}")
     print(f"delta latency: mean={out['delta_latency_mean_s']*1e3:.0f} ms "
           f"max={out['delta_latency_max_s']*1e3:.0f} ms; "
           f"events={out['events_processed']} ({out['events_per_sec']:.0f}/s)")
-    for i, (m, (up, down), ph) in enumerate(zip(out["miou_per_client"],
-                                                out["per_client_kbps"],
-                                                out["phases_per_client"])):
+    if out["n_gpus"] > 1:
+        utils = "/".join(f"{u:.2f}" for u in out["per_gpu_utilization"])
+        print(f"pool: per-gpu util {utils}; migrations={out['migrations']} "
+              f"({out['migration_s_total']:.1f} s); "
+              f"evictions={out['residency_evictions']}")
+    for i, (m, (up, down), ph, dev) in enumerate(zip(out["miou_per_client"],
+                                                     out["per_client_kbps"],
+                                                     out["phases_per_client"],
+                                                     out["devices_per_client"])):
+        gpus = ",".join(map(str, dev)) or "-"
         print(f"  client {i}: mIoU {m:.3f}  up {up:.0f} Kbps  down {down:.0f} Kbps  "
-              f"phases {ph}")
+              f"phases {ph}  gpus [{gpus}]")
 
 
 if __name__ == "__main__":

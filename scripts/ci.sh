@@ -22,6 +22,12 @@ echo "== serving smoke: benchmarks.serving_scale --smoke =="
 python -m benchmarks.serving_scale --smoke
 smoke=$?
 
-echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke"
-[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && echo "CI OK"
-exit $((tier1 | smoke))
+echo "== multi-GPU serving smoke: benchmarks.serving_scale --smoke --gpus 4 =="
+# asserts >=3x sustained-session scaling 1 -> 4 GPUs (fair policy) and that
+# affinity-aware placement beats blind assignment; refreshes BENCH_serving.json
+python -m benchmarks.serving_scale --smoke --gpus 4
+pool_smoke=$?
+
+echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke"
+[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && echo "CI OK"
+exit $((tier1 | smoke | pool_smoke))

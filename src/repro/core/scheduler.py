@@ -19,6 +19,9 @@ class GPUCostModel:
     # whole backlog, amortizing per-frame cost to a fraction of the solo rate
     label_batch_overhead_s: float = 0.05
     label_batch_discount: float = 0.5
+    # top-gamma% delta selection + entropy coding runs on the device after a
+    # phase (paper §3.1.2); 0.0 keeps the seed/PR-1 behavior (free)
+    delta_comp_s_per_mb: float = 0.0
 
     @property
     def phase_s(self) -> float:  # K=20 iterations
@@ -32,6 +35,12 @@ class GPUCostModel:
             return 0.0
         return (self.label_batch_overhead_s
                 + n_frames * self.teacher_infer_s * self.label_batch_discount)
+
+    def delta_comp_s(self, nbytes: int) -> float:
+        """GPU time to select/compress one ModelDelta of ``nbytes``."""
+        if nbytes <= 0:
+            return 0.0
+        return self.delta_comp_s_per_mb * nbytes / 1e6
 
 
 def next_in_turn(waiting: Iterable[int], turn: int, n_clients: int) -> int | None:

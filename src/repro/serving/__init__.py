@@ -1,4 +1,4 @@
-"""Event-driven AMS serving runtime — many edge devices, one GPU, a real(ish) network.
+"""Event-driven AMS serving runtime — many edge devices, a GPU pool, a real(ish) network.
 
 Paper-concept -> class map (Appendix D/E):
 
@@ -11,6 +11,10 @@ Paper-concept -> class map (Appendix D/E):
   ATR cycle reclamation (App. D)              `policies.GainAware` (recent
                                               φ-score + staleness priority,
                                               φ-aware eviction when saturated)
+  App. E scaling argument, many GPUs          `resources.GPUPool` (per-device
+                                              busy clocks + session residency)
+                                              + `policies.AffinityAware`
+                                              (session, gpu) placement
   Uplink frame batches / downlink deltas      `network.ClientNetwork` (links
   (§3.1.2, §3.2, Tables 1-2)                  occupy `bytes/rate` s, feed the
                                               per-client `BandwidthLedger`)
@@ -29,20 +33,23 @@ Quickstart::
                                                      down_kbps=2000)))
         for i, (world_i, ams_session_i) in enumerate(zip(worlds, ams))
     ]
-    result = ServingEngine(sessions, policy="gain",
-                           cfg=ServingConfig(duration=120.0)).run()
-    print(result["mean_miou"], result["per_client_kbps"],
-          result["delta_latency_mean_s"])
+    result = ServingEngine(sessions, policy="affinity",
+                           cfg=ServingConfig(duration=120.0, n_gpus=4)).run()
+    print(result["mean_miou"], result["per_gpu_utilization"],
+          result["migrations"])
 
-`sim.multiclient.run_multiclient` is now a thin shim over this engine, and
-`benchmarks/serving_scale.py` drives it with `StubSession`s to measure pure
-engine throughput (events/sec) at large client counts.
+`sim.multiclient.run_multiclient` is a thin shim over this engine (with
+``n_gpus``/``affinity`` kwargs; the defaults reproduce the single-GPU PR-1
+runs bit-for-bit), and `benchmarks/serving_scale.py` drives it with
+`StubSession`s to measure sustained sessions per GPU at large client counts.
 """
 from repro.serving.engine import ServingConfig, ServingEngine
 from repro.serving.events import Event, EventQueue
 from repro.serving.network import ClientNetwork, Link, LinkSpec
 from repro.serving.policies import (
     POLICIES,
+    AffinityAware,
+    Assignment,
     EarliestDeadlineFirst,
     FairRoundRobin,
     GainAware,
@@ -50,12 +57,14 @@ from repro.serving.policies import (
     SchedulingPolicy,
     make_policy,
 )
+from repro.serving.resources import GPUDevice, GPUPool, MigrationModel
 from repro.serving.session import SegServingSession, SessionBase, StubSession
 
 __all__ = [
     "Event", "EventQueue", "ClientNetwork", "Link", "LinkSpec",
     "SchedulingPolicy", "FairRoundRobin", "EarliestDeadlineFirst",
-    "GainAware", "GPURequest", "POLICIES", "make_policy",
+    "GainAware", "AffinityAware", "Assignment", "GPURequest", "POLICIES",
+    "make_policy", "GPUDevice", "GPUPool", "MigrationModel",
     "SegServingSession", "SessionBase", "StubSession",
     "ServingConfig", "ServingEngine",
 ]

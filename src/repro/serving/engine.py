@@ -1,27 +1,37 @@
 """Event-driven AMS serving runtime (Appendix E at scale).
 
 Replaces the per-frame tick loop of `sim.multiclient` with a discrete-event
-simulation: N sessions share one GPU and a modeled network, and nothing
-advances except by popping the next event. The lifecycle of one update
-period, in events:
+simulation: N sessions share a *pool* of GPUs (`resources.GPUPool`) and a
+modeled network, and nothing advances except by popping the next event. The
+lifecycle of one update period, in events:
 
-    sample  (edge)   frame captured at the ASR rate into the device outbox
-    upload  (edge)   every T_update the outbox ships over the rate-limited
-                     uplink (H.264 buffer bytes -> link occupancy)
-    request (server) the batch lands; admission control either queues a
-                     GPURequest or drops it (saturation telemetry)
-    <GPU grant>      when the GPU idles, the scheduling policy picks among
-                     queued requests; the teacher labels the *whole* queued
-                     backlog in one batched launch (amortized cost), then
-                     the picked session runs its K-iteration training phase
-    gpu_done         the fresh ModelDelta ships over the client's downlink
-    delta   (edge)   the — by now stale — delta lands and swaps in via the
-                     double-buffered EdgeClient
-    eval    (edge)   mIoU of the client-side weights against the teacher
+    sample    (edge)   frame captured at the ASR rate into the device outbox
+    upload    (edge)   every T_update the outbox ships over the rate-limited
+                       uplink (H.264 buffer bytes -> link occupancy)
+    request   (server) the batch lands; admission control either queues a
+                       GPURequest or drops it (saturation telemetry)
+    <grants>           whenever any device idles, the scheduling policy maps
+                       the ready queue onto the free devices as (session,
+                       gpu) assignments; each granted device stages the
+                       session's state if it is not resident (migration time
+                       on that device's clock), labels the queued backlog in
+                       one batched teacher launch, then runs the session's
+                       K-iteration training phase
+    gpu_done  (gpu g)  the phase ends on device g; the fresh ModelDelta is
+                       compressed on g's clock (delta_comp_s, optional) and
+                       ships over the client's downlink, followed by the ASR
+                       rate-control message (asr_ctrl_bytes, optional)
+    gpu_free  (gpu g)  g finishes compressing and rejoins the free set
+    delta     (edge)   the — by now stale — delta lands and swaps in via the
+                       double-buffered EdgeClient
+    rate_ctrl (edge)   the ASR's new sampling rate takes effect on-device
+    eval      (edge)   mIoU of the client-side weights against the teacher
 
-Simplifications kept from the seed: ASR rate updates reach the device for
-free (a few bytes of control traffic), and eval reads ground truth directly
-(it is measurement, not traffic). Everything else — who gets the GPU, when
+Defaults reproduce PR 1 bit-for-bit: ``n_gpus=1`` means one device, nothing
+to migrate to, no `gpu_free`/`rate_ctrl` events (compression and the rate
+message are off until their knobs are set), and the policy's `assign`
+degenerates to the old single `pick`. Eval still reads ground truth directly
+(it is measurement, not traffic). Everything else — who gets which GPU, when
 bytes move, how stale a delta is — is modeled.
 """
 from __future__ import annotations
@@ -34,6 +44,7 @@ import numpy as np
 from repro.core.scheduler import GPUCostModel
 from repro.serving.events import EventQueue
 from repro.serving.policies import GPURequest, SchedulingPolicy, make_policy
+from repro.serving.resources import GPUPool, MigrationModel
 
 
 def _phi_of(session) -> float:
@@ -46,9 +57,15 @@ def _phi_of(session) -> float:
 class ServingConfig:
     duration: float = 120.0
     max_queue: int = 16  # server backlog cap per-request admission
-    admission_util_cap: float | None = None  # projected-GPU-load session cap
+    admission_util_cap: float | None = None  # projected per-GPU-load cap
     batch_labeling: bool = True
     sample_eps: float = 1e-6  # floor on sampling rate when scheduling
+    # ---- pool knobs (n_gpus=1 + defaults == the PR-1 single-GPU engine) --
+    n_gpus: int = 1
+    migration: MigrationModel = field(default_factory=MigrationModel)
+    residency_cap: int | None = None  # sessions resident per device (None: HBM unbounded)
+    # ---- fidelity knobs (0 == unmodeled, the PR-1 behavior) --------------
+    asr_ctrl_bytes: int = 0  # rate-control message on the downlink
 
 
 @dataclass
@@ -62,16 +79,25 @@ class _Backlog:
 class ServingEngine:
     def __init__(self, sessions, policy: str | SchedulingPolicy = "fair",
                  cost: GPUCostModel | None = None,
-                 cfg: ServingConfig | None = None):
+                 cfg: ServingConfig | None = None,
+                 pool: GPUPool | None = None):
         self.sessions = list(sessions)
         self.policy = make_policy(policy)
         self.cost = cost or GPUCostModel()
         self.cfg = cfg or ServingConfig()
+        self.pool = pool or GPUPool(
+            n_gpus=self.cfg.n_gpus, cost=self.cost,
+            migration=self.cfg.migration,
+            residency_cap=self.cfg.residency_cap)
         self.q = EventQueue()
         self._queue: list[_Backlog] = []
-        self._gpu_busy = False
+        self._active: set[int] = set()  # clients mid-phase on some device
+        self._handlers = {
+            "sample": self._on_sample, "eval": self._on_eval,
+            "upload": self._on_upload, "request": self._on_request,
+            "gpu_done": self._on_gpu_done, "gpu_free": self._on_gpu_free,
+            "delta": self._on_delta, "rate_ctrl": self._on_rate_ctrl}
         # telemetry
-        self.busy_s = 0.0
         self.served = 0
         self.deferred = 0
         self.dropped_requests = 0
@@ -81,11 +107,17 @@ class ServingEngine:
 
     # ---- admission control ---------------------------------------------
     def _admit_sessions(self) -> None:
-        """Project each session's steady-state GPU demand and stop admitting
-        past the utilization cap; rejected sessions run inference-only (their
-        accuracy decay is the saturation signal, not a crash)."""
+        """Project each session's steady-state GPU demand against the pool's
+        aggregate budget (``admission_util_cap`` per device). Instead of
+        rejecting whichever sessions happen to be indexed last (the PR-1
+        rule), admission is gain-aware: sessions are considered in
+        descending-φ order, so when the pool is oversubscribed it is the
+        lowest-φ (near-static) sessions that get *parked* — they run
+        inference-only on stale weights; their accuracy decay is the
+        saturation signal, not a crash."""
         cap = self.cfg.admission_util_cap
-        load = 0.0
+        budget = None if cap is None else cap * self.pool.n
+        rho = []
         for s in self.sessions:
             est_frames = s.sampling_rate * s.t_update
             # project with the batched per-frame labeling rate. Slightly
@@ -95,19 +127,34 @@ class ServingEngine:
                 label_s = self.cost.label_batch_s(est_frames)
             else:
                 label_s = est_frames * self.cost.teacher_infer_s
-            rho = (label_s + s.k_iters * self.cost.train_iter_s) / max(s.t_update, 1e-9)
-            if cap is not None and load + rho > cap:
-                s.admitted = False
+            rho.append((label_s + s.k_iters * self.cost.train_iter_s)
+                       / max(s.t_update, 1e-9))
+        if budget is None:  # index order: keeps the load sum bit-identical
+            order = range(len(self.sessions))
+        else:
+            order = sorted(range(len(self.sessions)),
+                           key=lambda i: (-_phi_of(self.sessions[i]), i))
+        load = 0.0
+        full = False
+        for i in order:
+            s = self.sessions[i]
+            # strict priority: once the budget refuses a session, everything
+            # ranked below it is parked too — "the parked set is the lowest-φ
+            # suffix" is an invariant, not a tendency (no skip-ahead where a
+            # small near-static session trains while a dynamic one is parked)
+            if full or (budget is not None and load + rho[i] > budget):
+                s.admitted = False  # parked
+                full = True
             else:
                 s.admitted = True
-                load += rho
+                load += rho[i]
         self.offered_load = load
 
     # ---- event handlers ------------------------------------------------
     def _on_sample(self, ev) -> None:
         s = self.sessions[ev.client]
         s.capture(ev.time)
-        nxt = ev.time + 1.0 / max(s.sampling_rate, self.cfg.sample_eps)
+        nxt = ev.time + 1.0 / max(s.edge_sampling_rate, self.cfg.sample_eps)
         if nxt < self.cfg.duration:
             self.q.push(nxt, "sample", ev.client)
 
@@ -129,12 +176,13 @@ class ServingEngine:
 
     def _on_request(self, ev) -> None:
         s = self.sessions[ev.client]
-        if self._gpu_busy:
+        if not self.pool.has_free():
             self.deferred += 1
         req = GPURequest(client=ev.client, t_request=ev.time,
                          n_frames=len(ev.payload), k_iters=s.k_iters,
                          deadline=ev.time + s.t_update,
-                         phi=_phi_of(s), t_update=s.t_update)
+                         phi=_phi_of(s), t_update=s.t_update,
+                         state_bytes=getattr(s, "state_bytes", 0))
         if len(self._queue) >= self.cfg.max_queue:
             # saturated: the policy chooses the sacrifice (tail drop by
             # default; gain-aware evicts the lowest-value queued request)
@@ -152,8 +200,32 @@ class ServingEngine:
         # no new grants past the horizon: the backlog is left unserved (and
         # reported) rather than drained in overtime, which would overstate
         # both utilization and served-phase counts
-        if not self._gpu_busy and self._queue and t < self.cfg.duration:
-            self._start_service(t)
+        if not self._queue or t >= self.cfg.duration:
+            return
+        free = self.pool.free_ids()
+        if not free:
+            return
+        self._refresh_phi()
+        # one candidate per *idle* client: a session's training state is
+        # singular, so a client mid-phase on some device is ineligible (two
+        # devices cannot train the same weights concurrently), and only its
+        # oldest queued request competes — every policy's ranking already
+        # reduces same-client duplicates to the oldest one
+        ready: dict[int, GPURequest] = {}
+        for b in self._queue:
+            c = b.req.client
+            if c in self._active:
+                continue
+            if c not in ready or b.req.t_request < ready[c].t_request:
+                ready[c] = b.req
+        if not ready:
+            return
+        assignments = self.policy.assign(
+            t, list(ready.values()), free, self.pool)
+        for a in assignments:
+            backlog = next(b for b in self._queue if b.req is a.req)
+            self._queue.remove(backlog)
+            self._start_service(t, backlog, a.gpu)
 
     def _refresh_phi(self) -> None:
         # a request's φ is snapshotted at arrival; batched labeling can move
@@ -163,59 +235,95 @@ class ServingEngine:
         for b in self._queue:
             b.req.phi = _phi_of(self.sessions[b.req.client])
 
-    def _start_service(self, t: float) -> None:
-        self._refresh_phi()
-        picked = self.policy.pick(t, [b.req for b in self._queue])
-        backlog = next(b for b in self._queue if b.req is picked)
-        self._queue.remove(backlog)
-        # cross-client batched labeling: one launch clears every queued
-        # session's unlabeled frames, not just the picked one
+    def _start_service(self, t: float, backlog: _Backlog, gid: int) -> None:
+        dev = self.pool.device(gid)
+        # cross-client batched labeling: one launch on the granted device
+        # clears every still-queued session's unlabeled frames, not just the
+        # picked one (a co-granted device then finds its backlog pre-labeled)
         if self.cfg.batch_labeling:
             to_label = [backlog] + [b for b in self._queue if b.idxs]
         else:
             to_label = [backlog]
         n_label = sum(len(b.idxs) for b in to_label)
-        label_s = self.cost.label_batch_s(n_label)
+        label_s = dev.cost.label_batch_s(n_label)
         if n_label:
             self.label_batches += 1
             self.labels_total += n_label
-        t_labeled = t + label_s
+        # staging a non-resident session's state runs on this device's clock
+        # *before* the labeling launch, so labels land at t + mig_s + label_s
+        mig_s = self.pool.migration_s(backlog.req.client, gid,
+                                      backlog.req.state_bytes)
+        t_labeled = t + mig_s + label_s
         for b in to_label:
             self.sessions[b.req.client].label_and_ingest(b.idxs, t_labeled)
             b.idxs = []
-        dur = label_s + backlog.req.k_iters * self.cost.train_iter_s
-        # a phase granted near the horizon spills past it; only the in-window
-        # part counts toward utilization (keeps busy_s/duration <= 1)
-        self.busy_s += min(dur, self.cfg.duration - t)
-        self._gpu_busy = True
-        self.q.push(t + dur, "gpu_done", backlog.req.client)
+        dur = mig_s + label_s + backlog.req.k_iters * dev.cost.train_iter_s
+        backlog.req.gpu = gid
+        self.pool.grant(gid, backlog.req.client, t, dur, self.cfg.duration,
+                        mig_s)
+        self._active.add(backlog.req.client)
+        self.q.push(t + dur, "gpu_done", backlog.req.client, gid)
 
     def _on_gpu_done(self, ev) -> None:
+        gid = ev.payload
+        self._active.discard(ev.client)
         s = self.sessions[ev.client]
         delta = s.train(ev.time)
         self.served += 1
-        self._gpu_busy = False
+        t_free = ev.time
         if delta is not None:
-            arrival = s.net.send_down(ev.time, delta.total_bytes)
-            self.q.push(arrival, "delta", ev.client, (delta, ev.time))
+            s.note_device(gid)  # a real phase ran here (no-op grants don't)
+            comp_s = self.pool.device(gid).cost.delta_comp_s(delta.total_bytes)
+            if comp_s > 0.0:
+                # the device stays busy compressing; the delta ships after
+                self.pool.extend_busy(gid, ev.time, comp_s, self.cfg.duration)
+                t_free = ev.time + comp_s
+            arrival = s.net.send_down(t_free, delta.total_bytes)
+            self.q.push(arrival, "delta", ev.client, (delta, t_free))
+        if self.cfg.asr_ctrl_bytes > 0:
+            # the ASR's new rate rides the downlink too (PR-1 modeled it as
+            # free); the edge keeps sampling at its old rate until it lands
+            arrival = s.net.send_ctrl(t_free, self.cfg.asr_ctrl_bytes)
+            self.q.push(arrival, "rate_ctrl", ev.client, float(s.sampling_rate))
+        if t_free > ev.time:
+            self.q.push(t_free, "gpu_free", ev.client, gid)
+        else:
+            self.pool.release(gid)
+        # schedule even while this device compresses: the finished client is
+        # eligible again and other devices may be idle
+        self._maybe_start(ev.time)
+
+    def _on_gpu_free(self, ev) -> None:
+        self.pool.release(ev.payload)
         self._maybe_start(ev.time)
 
     def _on_delta(self, ev) -> None:
         delta, t_sent = ev.payload
         self.sessions[ev.client].apply_delta(delta, t_sent, ev.time)
 
+    def _on_rate_ctrl(self, ev) -> None:
+        self.sessions[ev.client].apply_rate_ctrl(ev.payload)
+
     # ---- main loop ------------------------------------------------------
-    def run(self) -> dict:
-        cfg = self.cfg
+    def _init_events(self) -> None:
         self._admit_sessions()
-        handlers = {"sample": self._on_sample, "eval": self._on_eval,
-                    "upload": self._on_upload, "request": self._on_request,
-                    "gpu_done": self._on_gpu_done, "delta": self._on_delta}
         for i, s in enumerate(self.sessions):
+            if self.cfg.asr_ctrl_bytes > 0:
+                # the boot-time rate is already on-device; every *change*
+                # from here on must be delivered over the downlink
+                s.apply_rate_ctrl(s.sampling_rate)
             self.q.push(0.0, "eval", i)
             if s.admitted:
                 self.q.push(0.0, "sample", i)
-                self.q.push(min(s.t_update, cfg.duration * 0.999), "upload", i)
+                self.q.push(min(s.t_update, self.cfg.duration * 0.999),
+                            "upload", i)
+
+    def _dispatch(self, ev) -> None:
+        self._handlers[ev.kind](ev)
+
+    def run(self) -> dict:
+        self._init_events()
+        handlers = self._handlers
         t0 = time.time()
         while self.q:
             ev = self.q.pop()
@@ -231,16 +339,18 @@ class ServingEngine:
         lat = [l for s in self.sessions for l in s.delta_latencies]
         phases = [s.phases for s in self.sessions]
         n_req = self.served + self.dropped_requests + len(self._queue)
+        busy_s = sum(d.busy_s for d in self.pool.devices)
         return {
             "n_clients": len(self.sessions),
             "miou_per_client": per_client,
             "mean_miou": float(np.mean(per_client)),
-            "gpu_utilization": self.busy_s / max(cfg.duration, 1e-9),
+            "gpu_utilization": busy_s / max(cfg.duration * self.pool.n, 1e-9),
             "phases_served": self.served,
             "phases_deferred": self.deferred,
             "phases_per_client": phases,
             "scheduler": self.policy.name,
             "admitted_clients": sum(s.admitted for s in self.sessions),
+            "parked_clients": [s.idx for s in self.sessions if not s.admitted],
             "offered_load": self.offered_load,
             "dropped_requests": self.dropped_requests,
             "unserved_backlog": len(self._queue),
@@ -248,6 +358,16 @@ class ServingEngine:
             "max_backlog": self.max_backlog,
             "label_batches": self.label_batches,
             "labels_total": self.labels_total,
+            # pool telemetry
+            "n_gpus": self.pool.n,
+            "per_gpu_utilization": self.pool.utilization(cfg.duration),
+            "per_gpu_grants": [d.grants for d in self.pool.devices],
+            "migrations": self.pool.migrations,
+            "migration_s_total": self.pool.migration_s_total,
+            "residency_evictions": self.pool.evictions,
+            "devices_per_client": [sorted(set(s.phase_devices))
+                                   for s in self.sessions],
+            # network telemetry
             "per_client_kbps": kbps,
             "mean_up_kbps": float(np.mean([u for u, _ in kbps])),
             "mean_down_kbps": float(np.mean([d for _, d in kbps])),

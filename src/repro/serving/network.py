@@ -69,5 +69,11 @@ class ClientNetwork:
         self.ledger.downlink(nbytes, t_now, what)
         return self.down.transfer(t_now, nbytes)
 
+    def send_ctrl(self, t_now: float, nbytes: int) -> float:
+        """The ASR rate-control message: a few bytes, but they queue behind
+        the delta on the same downlink and pay the same propagation delay —
+        the edge samples at its *old* rate until this lands."""
+        return self.send_down(t_now, nbytes, what="asr-rate")
+
     def kbps(self, duration_s: float) -> tuple[float, float]:
         return self.ledger.kbps(duration_s)

@@ -1,17 +1,32 @@
-"""Pluggable GPU scheduling policies for the serving engine.
+"""Pluggable (session, gpu) scheduling policies for the serving engine.
 
-A policy answers one question: the GPU just went idle and several sessions
-have work queued — who goes next? Three answers:
+A policy answers one question: some devices in the pool just went idle and
+several sessions have work queued — which sessions run next, and on which
+GPU? The primitive is still a ranking (`pick`: who is most deserving), but
+the engine-facing surface is `assign`, which maps the ready queue onto the
+free devices of a `resources.GPUPool`:
 
 * `FairRoundRobin` — the paper's Appendix E strategy: a rotating turn
   pointer over waiting sessions (shares `next_in_turn` with
-  `core.scheduler.RoundRobinScheduler`).
+  `core.scheduler.RoundRobinScheduler`). Ties — several queued requests
+  from the turn-winning client — break deterministically by request age,
+  so multi-GPU runs reproduce regardless of queue arrival order.
 * `EarliestDeadlineFirst` — each request carries a deadline (its session's
   next T_update boundary); the most overdue phase runs first.
 * `GainAware` — ATR-style cycle reclamation generalized to the scheduler:
   rank sessions by recent scene dynamics (the ASR φ-signal, via sampling
   rate) times staleness, so dynamic feeds preempt near-static ones while a
   growing staleness term keeps static feeds from starving outright.
+* `AffinityAware` — GainAware's ranking, placement-aware: a candidate's
+  score is discounted by the weight-migration time the pool would charge
+  on that device (zero where the session is already resident), so sessions
+  stick to the GPU holding their state and the pool's migration tax is
+  mostly avoided rather than mostly paid.
+
+The three base policies are deliberately affinity-*blind* in placement
+(lowest-numbered free device) — they still pay the pool's migration charge
+whenever they bounce a session across devices, which is exactly the gap
+`AffinityAware` closes.
 """
 from __future__ import annotations
 
@@ -31,13 +46,46 @@ class GPURequest:
     deadline: float  # t_request + the session's current T_update
     phi: float  # recent φ-score signal (~0 static feed, ~1+ dynamic)
     t_update: float  # session's current update period (ATR-stretched)
+    state_bytes: int = 0  # session training state (weights+opt+buffer)
+    gpu: int | None = None  # device the grant landed on (engine fills)
+
+
+@dataclass(frozen=True)
+class Assignment:
+    """One (request, device) pairing chosen by a policy."""
+
+    req: GPURequest
+    gpu: int
 
 
 class SchedulingPolicy:
     name = "base"
 
     def pick(self, t_now: float, ready: list[GPURequest]) -> GPURequest:
+        """Rank the ready queue: who is most deserving of the next grant?"""
         raise NotImplementedError
+
+    def place(self, t_now: float, req: GPURequest, free: list[int],
+              pool) -> int:
+        """Which free device serves ``req``. Base policies are affinity-
+        blind: lowest-numbered free device (they pay whatever migration
+        the pool charges)."""
+        return min(free)
+
+    def assign(self, t_now: float, ready: list[GPURequest],
+               free: list[int], pool) -> list[Assignment]:
+        """Map the ready queue onto the free devices: repeatedly pick the
+        top-ranked request and place it, until requests or devices run out.
+        With one device this degenerates to PR-1's single `pick`."""
+        ready, free = list(ready), list(free)
+        out: list[Assignment] = []
+        while ready and free:
+            req = self.pick(t_now, ready)
+            gid = self.place(t_now, req, free, pool)
+            out.append(Assignment(req=req, gpu=gid))
+            ready.remove(req)
+            free.remove(gid)
+        return out
 
     def evict(self, t_now: float, overfull: list[GPURequest]) -> GPURequest:
         """Saturation: the backlog is over capacity; choose the request to
@@ -58,14 +106,18 @@ class FairRoundRobin(SchedulingPolicy):
         # unwrapped on purpose: next_in_turn reduces mod the current count,
         # which grows as later-indexed clients issue their first requests
         self.turn = nxt + 1
-        return next(r for r in ready if r.client == nxt)
+        # several queued requests from the winning client are possible under
+        # saturation; serve oldest-first so the choice is a function of the
+        # requests, not of queue arrival order (multi-GPU reproducibility)
+        return min((r for r in ready if r.client == nxt),
+                   key=lambda r: (r.t_request, r.deadline, r.n_frames))
 
 
 class EarliestDeadlineFirst(SchedulingPolicy):
     name = "edf"
 
     def pick(self, t_now: float, ready: list[GPURequest]) -> GPURequest:
-        return min(ready, key=lambda r: (r.deadline, r.client))
+        return min(ready, key=lambda r: (r.deadline, r.client, r.t_request))
 
 
 @dataclass
@@ -88,16 +140,52 @@ class GainAware(SchedulingPolicy):
 
     def pick(self, t_now: float, ready: list[GPURequest]) -> GPURequest:
         # max score; ties broken by client id for determinism
-        return max(ready, key=lambda r: (self._score(t_now, r), -r.client))
+        return max(ready, key=lambda r: (self._score(t_now, r), -r.client,
+                                         -r.t_request))
 
     def evict(self, t_now: float, overfull: list[GPURequest]) -> GPURequest:
         return min(overfull, key=lambda r: (self._score(t_now, r), r.client))
+
+
+@dataclass
+class AffinityAware(GainAware):
+    """Gain-aware ranking with residency-aware placement.
+
+    Jointly scores (request, device) pairs: the gain score minus the
+    migration time the pool would charge to stage that session on that
+    device, normalized by the request's update period (one period of
+    migration cancels one unit of φ). A resident pairing costs nothing, so
+    sessions gravitate to the GPU already holding their weights; a dynamic
+    feed can still justify a migration when the score gap is larger than
+    ``migration_weight`` times the move."""
+
+    migration_weight: float = 1.0
+    name: str = field(default="affinity", init=False)
+
+    def assign(self, t_now: float, ready: list[GPURequest],
+               free: list[int], pool) -> list[Assignment]:
+        ready, free = list(ready), list(free)
+        out: list[Assignment] = []
+        while ready and free:
+            def net(pair):
+                r, g = pair
+                mig = pool.migration_s(r.client, g, r.state_bytes)
+                score = (self._score(t_now, r)
+                         - self.migration_weight * mig / max(r.t_update, 1e-9))
+                return (score, -r.client, -r.t_request, -g)
+
+            req, gid = max(((r, g) for r in ready for g in free), key=net)
+            out.append(Assignment(req=req, gpu=gid))
+            ready.remove(req)
+            free.remove(gid)
+        return out
 
 
 POLICIES = {
     "fair": FairRoundRobin,
     "edf": EarliestDeadlineFirst,
     "gain": GainAware,
+    "affinity": AffinityAware,
 }
 
 

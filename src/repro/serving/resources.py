@@ -1,0 +1,167 @@
+"""Pooled GPU resources: per-device busy clocks, cost models, and residency.
+
+PR 1's engine modeled the server's accelerator as one boolean (`gpu_busy`).
+This module makes the GPU a first-class pooled resource:
+
+* `GPUDevice` — one accelerator: a busy flag the event loop toggles, a
+  `GPUCostModel` (devices may be heterogeneous), and busy-seconds telemetry.
+* `MigrationModel` — what it costs to move one session's server-side state
+  (student weights + optimizer moments + the horizon replay buffer) onto a
+  device it is not resident on: a setup charge (stream/allocator/autotune
+  warm-up dominates in practice) plus bytes over an interconnect.
+* `GPUPool` — the devices plus *residency tracking*: each session's training
+  state lives on exactly one device (its "home"); granting a session to a
+  foreign device pays the migration transfer **on that device's clock** and
+  re-homes it. An optional per-device `residency_cap` models finite HBM:
+  past it the least-recently-granted session spills to host and pays a full
+  restage on its next grant anywhere.
+
+First touch is free: an admitted session's state is staged onto its first
+device before the run starts (admission-time prefetch), so a 1-GPU pool
+reproduces the PR-1 single-flag engine exactly — there is nowhere to
+migrate to and nothing is ever evicted.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.scheduler import GPUCostModel
+
+
+@dataclass(frozen=True)
+class MigrationModel:
+    """Cost of re-homing one session's training state onto another device.
+
+    ``setup_s`` is the fixed charge (context/stream setup, allocator growth,
+    kernel autotune re-warm); ``gbps`` the effective interconnect rate for
+    the state bytes themselves (PCIe/NVLink staging, conservatively low
+    because real moves serialize through host checkpointing)."""
+
+    gbps: float = 2.0
+    setup_s: float = 0.1
+
+    def transfer_s(self, nbytes: int) -> float:
+        if self.gbps <= 0:  # unmodeled interconnect: instantaneous
+            return 0.0
+        return self.setup_s + nbytes * 8.0 / (self.gbps * 1e9)
+
+
+@dataclass
+class GPUDevice:
+    """One accelerator in the pool: busy flag + cost model + telemetry."""
+
+    gid: int
+    cost: GPUCostModel = field(default_factory=GPUCostModel)
+    busy: bool = False
+    busy_s: float = 0.0
+    grants: int = 0
+
+
+class GPUPool:
+    """Per-device busy clocks + session-state residency for the engine.
+
+    The pool is pure bookkeeping — it never decides *who* runs (that is the
+    `SchedulingPolicy`) or *when* (the event loop). It answers: which devices
+    are free, what would running session c on device g cost in migration
+    time, and it enforces that no device is ever double-booked."""
+
+    def __init__(self, n_gpus: int = 1, cost: GPUCostModel | None = None,
+                 costs: list[GPUCostModel] | None = None,
+                 migration: MigrationModel | None = None,
+                 residency_cap: int | None = None):
+        if residency_cap is not None and residency_cap < 1:
+            raise ValueError(
+                f"residency_cap must be >= 1 (or None for unbounded HBM), "
+                f"got {residency_cap}")
+        if costs is None:
+            costs = [cost or GPUCostModel()] * max(n_gpus, 1)
+        self.devices = [GPUDevice(gid=g, cost=c) for g, c in enumerate(costs)]
+        self.migration = migration or MigrationModel()
+        self.residency_cap = residency_cap
+        self._home: dict[int, int] = {}  # client -> device holding its state
+        self._last_grant: dict[int, dict[int, float]] = {
+            d.gid: {} for d in self.devices}  # gid -> {client: t of last grant}
+        self._spilled: set[int] = set()  # evicted to host; next grant restages
+        # telemetry
+        self.migrations = 0
+        self.migration_s_total = 0.0
+        self.evictions = 0
+
+    # ---- capacity ------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return len(self.devices)
+
+    def device(self, gid: int) -> GPUDevice:
+        return self.devices[gid]
+
+    def free_ids(self) -> list[int]:
+        return [d.gid for d in self.devices if not d.busy]
+
+    def has_free(self) -> bool:
+        return any(not d.busy for d in self.devices)
+
+    # ---- residency -----------------------------------------------------
+    def home_of(self, client: int) -> int | None:
+        return self._home.get(client)
+
+    def is_resident(self, client: int, gid: int) -> bool:
+        return self._home.get(client) == gid and client not in self._spilled
+
+    def migration_s(self, client: int, gid: int, state_bytes: int) -> float:
+        """Time device ``gid`` would spend staging ``client``'s state before
+        it can train there. Zero when already resident; zero on first touch
+        (admission-time prefetch); a full restage after a host spill."""
+        home = self._home.get(client)
+        if client in self._spilled:
+            return self.migration.transfer_s(state_bytes)
+        if home is None or home == gid:
+            return 0.0
+        return self.migration.transfer_s(state_bytes)
+
+    # ---- grant / release ----------------------------------------------
+    def grant(self, gid: int, client: int, t: float, dur_s: float,
+              horizon_s: float, mig_s: float = 0.0) -> None:
+        """Occupy ``gid`` for ``dur_s`` (which already includes ``mig_s``)
+        and re-home ``client`` there. Raises on double-booking — the policy
+        layer must only hand out free devices."""
+        dev = self.devices[gid]
+        if dev.busy:
+            raise RuntimeError(
+                f"device {gid} double-booked at t={t:.3f} (client {client})")
+        dev.busy = True
+        dev.grants += 1
+        # phases granted near the horizon spill past it; only the in-window
+        # part counts toward utilization (keeps busy_s <= horizon per device)
+        dev.busy_s += min(dur_s, max(horizon_s - t, 0.0))
+        if mig_s > 0.0:
+            self.migrations += 1
+            self.migration_s_total += mig_s
+        prev = self._home.get(client)
+        if prev is not None and prev != gid:
+            self._last_grant[prev].pop(client, None)
+        self._home[client] = gid
+        self._last_grant[gid][client] = t
+        self._spilled.discard(client)
+        cap = self.residency_cap
+        if cap is not None and len(self._last_grant[gid]) > cap:
+            lru = self._last_grant[gid]
+            victim = min((c for c in lru if c != client),
+                         key=lambda c: (lru[c], c))
+            del lru[victim]
+            del self._home[victim]
+            self._spilled.add(victim)
+            self.evictions += 1
+
+    def extend_busy(self, gid: int, t: float, extra_s: float,
+                    horizon_s: float) -> None:
+        """Keep a granted device busy past its phase (delta compression)."""
+        dev = self.devices[gid]
+        dev.busy_s += min(extra_s, max(horizon_s - t, 0.0))
+
+    def release(self, gid: int) -> None:
+        self.devices[gid].busy = False
+
+    # ---- telemetry -----------------------------------------------------
+    def utilization(self, horizon_s: float) -> list[float]:
+        return [d.busy_s / max(horizon_s, 1e-9) for d in self.devices]

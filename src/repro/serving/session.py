@@ -39,14 +39,31 @@ class SessionBase:
         self.net = net or ClientNetwork(LinkSpec())
         self._outbox: list[int] = []  # sampled frame indices awaiting upload
         self.admitted = True
+        self.state_bytes = 0  # server-side training state (migration cost)
+        self._edge_rate: float | None = None  # last *delivered* ASR rate
         # telemetry
         self.mious: list[float] = []
         self.delta_latencies: list[float] = []
         self.phases = 0
+        self.phase_devices: list[int] = []  # which GPU served each phase
 
     def take_outbox(self) -> list[int]:
         out, self._outbox = self._outbox, []
         return out
+
+    @property
+    def edge_sampling_rate(self) -> float:
+        """The rate the device actually samples at. With the rate-control
+        message modeled (``ServingConfig.asr_ctrl_bytes > 0``) this is the
+        last rate *delivered* over the downlink; otherwise the server-side
+        rate applies instantly (the PR-1 simplification)."""
+        return self.sampling_rate if self._edge_rate is None else self._edge_rate
+
+    def apply_rate_ctrl(self, rate: float) -> None:
+        self._edge_rate = rate
+
+    def note_device(self, gid: int) -> None:
+        self.phase_devices.append(gid)
 
 
 class SegServingSession(SessionBase):
@@ -63,6 +80,13 @@ class SegServingSession(SessionBase):
         self.fps = world.video.cfg.fps
         self.eval_interval_s = eval_stride / self.fps
         self._n_pixels = world.video.cfg.height * world.video.cfg.width
+        # what a GPU must stage to host this session: params + Adam moments
+        # (x3) plus the horizon replay buffer of decoded frames (float32 RGB
+        # at the ~1 fps nominal sampling rate)
+        param_bytes = sum(np.asarray(x).nbytes
+                          for x in jax.tree.leaves(params0))
+        buffer_bytes = int(session.cfg.t_horizon) * self._n_pixels * 3 * 4
+        self.state_bytes = 3 * param_bytes + buffer_bytes
 
     # ---- edge side -----------------------------------------------------
     @property
@@ -140,8 +164,10 @@ class StubSession(SessionBase):
     def __init__(self, idx: int, *, fps: float = 4.0, t_update: float = 10.0,
                  k_iters: int = 20, rate: float = 1.0, dynamics: float = 0.01,
                  frame_bytes: int = 7000, delta_bytes: int = 20_000,
-                 eval_stride: int = 6, net: ClientNetwork | None = None):
+                 state_bytes: int = 32_000_000, eval_stride: int = 6,
+                 net: ClientNetwork | None = None):
         super().__init__(idx, net)
+        self.state_bytes = state_bytes  # modeled weights+opt+buffer residency
         self.fps = fps
         self.sampling_rate = rate
         self.phi_signal = rate  # stubs: the configured rate IS the dynamics

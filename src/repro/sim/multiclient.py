@@ -1,10 +1,13 @@
-"""Multiple edge devices sharing one server GPU (Appendix E, Fig. 6/10).
+"""Multiple edge devices sharing a server GPU pool (Appendix E, Fig. 6/10).
 
 Compatibility shim: `run_multiclient` keeps its seed-era signature and
 result-dict keys but now builds sessions for the event-driven runtime in
-`repro.serving` — so phases queue behind a modeled GPU, frame batches and
-deltas occupy rate-limited links (deltas arrive *stale*, never teleported),
-and the GPU policy is pluggable (``policy="fair" | "edf" | "gain"``).
+`repro.serving` — so phases queue behind a modeled GPU pool, frame batches
+and deltas occupy rate-limited links (deltas arrive *stale*, never
+teleported), and the GPU policy is pluggable (``policy="fair" | "edf" |
+"gain" | "affinity"``). ``n_gpus`` sizes the pool and ``affinity=True``
+selects residency-aware (session, gpu) placement; the defaults
+(``n_gpus=1``, blind) reproduce the PR-1 single-GPU runs bit-for-bit.
 """
 from __future__ import annotations
 
@@ -74,6 +77,8 @@ def run_multiclient(
     stationary_frac: float = 0.3,
     seed: int = 0,
     policy: str = "fair",
+    n_gpus: int | None = None,
+    affinity: bool = False,
     link: LinkSpec | None = None,
     serving_cfg: ServingConfig | None = None,
 ) -> dict:
@@ -81,20 +86,36 @@ def run_multiclient(
 
     Seed-era keys (``n_clients``, ``miou_per_client``, ``mean_miou``,
     ``gpu_utilization``, ``phases_served``, ``phases_deferred``) are
-    preserved; the engine adds per-client Kbps, delta latency, deferral-rate
-    and events/sec fields on top.
+    preserved; the engine adds per-client Kbps, delta latency, deferral-rate,
+    per-GPU utilization/migration and events/sec fields on top.
+
+    ``n_gpus`` sizes the server's GPU pool (sessions then compete for
+    (session, gpu) assignments instead of one busy flag) and
+    ``affinity=True`` swaps in the residency-aware `AffinityAware` policy —
+    the defaults keep single-GPU PR-1 results bit-identical.
 
     The ``duration`` kwarg governs the run: it sizes the videos AND the
     engine horizon. A ``serving_cfg`` supplies the other engine knobs
-    (queue cap, admission, batching); its own ``duration`` is overridden so
-    clients can never be scored past the end of their streams."""
+    (queue cap, admission, batching, migration model, its own ``n_gpus``);
+    its ``duration`` is overridden so clients can never be scored past the
+    end of their streams, and an explicit ``n_gpus`` kwarg (even 1) wins
+    over the config's."""
     sessions = build_sessions(
         n_clients, pretrained, seg_cfg, ams_cfg, duration=duration,
         video_kw=video_kw, eval_stride=eval_stride,
         stationary_frac=stationary_frac, seed=seed, link=link)
+    if affinity:
+        if not (isinstance(policy, str) and policy in ("fair", "gain",
+                                                       "affinity")):
+            raise ValueError(
+                f"affinity=True swaps in the gain-based AffinityAware "
+                f"policy; it cannot be combined with policy={policy!r}")
+        policy = "affinity"
     if serving_cfg is None:
-        cfg = ServingConfig(duration=duration)
+        cfg = ServingConfig(duration=duration, n_gpus=n_gpus or 1)
     else:
-        cfg = dataclasses.replace(serving_cfg, duration=duration)
+        cfg = dataclasses.replace(
+            serving_cfg, duration=duration,
+            n_gpus=serving_cfg.n_gpus if n_gpus is None else n_gpus)
     engine = ServingEngine(sessions, policy=policy, cost=cost, cfg=cfg)
     return engine.run()

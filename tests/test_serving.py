@@ -1,9 +1,11 @@
 """Event-driven serving runtime: queue ordering, link math, scheduler
-fairness, admission control, and the `run_multiclient` compatibility shim."""
+fairness, the GPU pool (residency, migration, work conservation), admission
+parking, and the `run_multiclient` compatibility shim."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import given, settings, st  # hypothesis, or a fallback when absent
 
 from repro.core.client import EdgeClient
 from repro.core.delta import encode_delta
@@ -11,8 +13,10 @@ from repro.core.scheduler import GPUCostModel, RoundRobinScheduler
 from repro.serving import (
     ClientNetwork,
     EventQueue,
+    GPUPool,
     GPURequest,
     LinkSpec,
+    MigrationModel,
     ServingConfig,
     ServingEngine,
     StubSession,
@@ -247,6 +251,310 @@ def test_engine_saturation_drops_requests():
     assert r["max_backlog"] <= 4
 
 
+# ---------------- GPU pool: residency + migration ----------------
+
+
+def test_pool_double_booking_raises():
+    pool = GPUPool(2)
+    pool.grant(0, client=0, t=0.0, dur_s=1.0, horizon_s=10.0)
+    with pytest.raises(RuntimeError, match="double-booked"):
+        pool.grant(0, client=1, t=0.5, dur_s=1.0, horizon_s=10.0)
+    pool.grant(1, client=1, t=0.5, dur_s=1.0, horizon_s=10.0)  # other dev ok
+    assert pool.free_ids() == []
+    pool.release(0)
+    assert pool.free_ids() == [0]
+
+
+def test_pool_migration_first_touch_free_then_charged():
+    pool = GPUPool(2, migration=MigrationModel(gbps=1.0, setup_s=0.5))
+    nb = 10 ** 9  # 8 Gbit over a 1 Gbps interconnect = 8 s + setup
+    assert pool.migration_s(7, 0, nb) == 0.0  # first touch: staged at admit
+    pool.grant(0, client=7, t=0.0, dur_s=1.0, horizon_s=100.0)
+    assert pool.is_resident(7, 0)
+    assert pool.migration_s(7, 0, nb) == 0.0  # warm on home
+    assert pool.migration_s(7, 1, nb) == pytest.approx(8.5)  # foreign device
+    pool.release(0)
+    # moving the grant re-homes the session and counts the migration
+    mig = pool.migration_s(7, 1, nb)
+    pool.grant(1, client=7, t=2.0, dur_s=1.0, horizon_s=100.0, mig_s=mig)
+    assert pool.home_of(7) == 1 and pool.migrations == 1
+    assert pool.migration_s_total == pytest.approx(8.5)
+
+
+def test_pool_residency_cap_spills_lru():
+    pool = GPUPool(1, residency_cap=1,
+                   migration=MigrationModel(gbps=1.0, setup_s=0.1))
+    pool.grant(0, client=0, t=0.0, dur_s=1.0, horizon_s=50.0)
+    pool.release(0)
+    pool.grant(0, client=1, t=2.0, dur_s=1.0, horizon_s=50.0)
+    pool.release(0)
+    assert pool.evictions == 1  # client 0 spilled to host
+    assert not pool.is_resident(0, 0)
+    assert pool.migration_s(0, 0, 10 ** 9) > 0.0  # restage even on old home
+
+
+def test_pool_busy_accounting_clips_at_horizon():
+    pool = GPUPool(1)
+    pool.grant(0, client=0, t=9.0, dur_s=5.0, horizon_s=10.0)
+    assert pool.device(0).busy_s == pytest.approx(1.0)  # in-window part only
+
+
+# ---------------- (session, gpu) assignment ----------------
+
+
+def test_fair_pick_independent_of_queue_arrival_order():
+    # two queued requests from the same client: the oldest must win no
+    # matter how the queue happens to be ordered (multi-GPU reproducibility)
+    old, new = _req(1, t_request=1.0), _req(1, t_request=5.0)
+    other = _req(0, t_request=2.0)
+    for ready in ([other, old, new], [new, other, old], [old, new, other]):
+        p = make_policy("fair")
+        p.turn = 1
+        assert p.pick(10.0, list(ready)) is old
+
+
+def test_assign_maps_queue_onto_free_devices():
+    pool = GPUPool(4)
+    p = make_policy("fair")
+    ready = [_req(c) for c in range(3)]
+    got = p.assign(0.0, ready, [0, 1, 2, 3], pool)
+    assert [(a.req.client, a.gpu) for a in got] == [(0, 0), (1, 1), (2, 2)]
+    # more requests than devices: only the free ones are handed out
+    p2 = make_policy("fair")
+    got = p2.assign(0.0, [_req(c) for c in range(5)], [2, 3], pool)
+    assert [(a.req.client, a.gpu) for a in got] == [(0, 2), (1, 3)]
+
+
+def test_affinity_places_on_resident_device():
+    pool = GPUPool(2, migration=MigrationModel(gbps=1.0, setup_s=0.5))
+    pool.grant(1, client=3, t=0.0, dur_s=1.0, horizon_s=100.0)
+    pool.release(1)
+    req = _req(3)
+    req.state_bytes = 10 ** 9
+    blind = make_policy("gain").assign(5.0, [req], [0, 1], pool)
+    aware = make_policy("affinity").assign(5.0, [req], [0, 1], pool)
+    assert blind[0].gpu == 0  # affinity-blind: lowest-numbered free device
+    assert aware[0].gpu == 1  # resident device: migration avoided
+
+
+# ---------------- engine on the pool ----------------
+
+
+def test_engine_n_gpus_1_matches_pr1_engine():
+    """The pooled engine with one device must reproduce the PR-1 single
+    `gpu_busy`-flag engine bit-for-bit (numbers captured from it)."""
+    gold = {
+        "fair": {"mean_miou": 0.8730922989000001,
+                 "gpu_utilization": 0.9428994666666667,
+                 "phases_served": 80, "phases_deferred": 101,
+                 "dropped_requests": 17,
+                 "mean_up_kbps": 45.615644444444435,
+                 "mean_down_kbps": 11.851851851851853,
+                 "delta_latency_mean_s": 0.20999999999999908,
+                 "labels_total": 706, "label_batches": 34,
+                 "max_backlog": 8, "events_processed": 2012},
+        "gain": {"mean_miou": 0.8688187919555556,
+                 "gpu_utilization": 0.9428994666666667,
+                 "phases_served": 71, "phases_deferred": 101,
+                 "dropped_requests": 25,
+                 "mean_up_kbps": 45.615644444444435,
+                 "mean_down_kbps": 10.518518518518519,
+                 "delta_latency_mean_s": 0.20999999999999935,
+                 "labels_total": 780, "label_batches": 31,
+                 "max_backlog": 8, "events_processed": 1994},
+    }
+
+    def fleet():
+        return [StubSession(i, rate=0.15 if i < 1 else 1.0,
+                            dynamics=0.0005 if i < 1 else 0.004,
+                            net=ClientNetwork(LinkSpec(up_kbps=500.0,
+                                                       down_kbps=1000.0)))
+                for i in range(6)]
+
+    for policy, want in gold.items():
+        r = ServingEngine(fleet(), policy=policy,
+                          cfg=ServingConfig(duration=180.0, max_queue=8)).run()
+        for k, v in want.items():
+            assert r[k] == pytest.approx(v, rel=0, abs=1e-12), (policy, k)
+        assert r["migrations"] == 0 and r["n_gpus"] == 1
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(2, 10), n_gpus=st.integers(1, 4),
+       policy=st.sampled_from(["fair", "edf", "gain", "affinity"]))
+def test_pool_never_double_books_and_busy_bounded(n, n_gpus, policy):
+    """Any fleet/pool/policy: `GPUPool.grant` raising on overlap means a
+    clean run IS the no-double-booking proof; per-device utilization can
+    never exceed the horizon."""
+    fleet = _stub_fleet(n)
+    eng = ServingEngine(fleet, policy=policy,
+                        cfg=ServingConfig(duration=90.0, n_gpus=n_gpus))
+    r = eng.run()  # raises RuntimeError on any double-booking
+    assert all(d.busy_s <= 90.0 + 1e-9 for d in eng.pool.devices)
+    assert sum(r["per_gpu_grants"]) >= r["phases_served"]
+    assert sum(r["phases_per_client"]) == r["phases_served"]
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(4, 14), n_gpus=st.integers(1, 4),
+       comp=st.sampled_from([0.0, 200.0]))
+def test_engine_is_work_conserving(n, n_gpus, comp):
+    """No *eligible* request may sit queued while a device idles inside the
+    horizon (a client already mid-phase elsewhere is not eligible: its
+    training state is singular and cannot run on two devices at once).
+    Exercised with delta compression both off and on — a compressing device
+    must not stall scheduling on the rest of the pool."""
+    eng = ServingEngine(_stub_fleet(n), policy="fair",
+                        cost=GPUCostModel(delta_comp_s_per_mb=comp),
+                        cfg=ServingConfig(duration=60.0, n_gpus=n_gpus))
+    eng._init_events()
+    while eng.q:
+        ev = eng.q.pop()
+        eng._dispatch(ev)
+        if ev.time < eng.cfg.duration:
+            eligible = [b for b in eng._queue
+                        if b.req.client not in eng._active]
+            assert not (eligible and eng.pool.free_ids()), (
+                f"{len(eligible)} eligible requests wait while devices "
+                f"{eng.pool.free_ids()} idle at t={ev.time:.2f}")
+
+
+def test_no_session_trains_on_two_devices_at_once():
+    """Saturate a 4-GPU pool with few clients so duplicate same-client
+    requests queue up: a client must never be granted a second device while
+    its first phase is still running."""
+    fleet = _stub_fleet(3)
+    eng = ServingEngine(fleet, policy="fair",
+                        cfg=ServingConfig(duration=90.0, n_gpus=4))
+    eng._init_events()
+    running: dict[int, float] = {}  # client -> phase end time
+    while eng.q:
+        ev = eng.q.pop()
+        if ev.kind == "gpu_done":
+            running.pop(ev.client, None)
+        before = set(eng._active)
+        eng._dispatch(ev)
+        for c in eng._active - before:
+            assert c not in running, (
+                f"client {c} granted a second device at t={ev.time:.2f} "
+                f"while already mid-phase")
+            running[c] = ev.time
+
+
+def _scale_fleet(n):
+    """The serving_scale fleet shape: 30% near-static head, dynamic tail."""
+    link = LinkSpec(up_kbps=500.0, down_kbps=2000.0)
+    return [StubSession(i, rate=0.15 if i < int(0.3 * n) else 1.0,
+                        dynamics=0.0005 if i < int(0.3 * n) else 0.004,
+                        net=ClientNetwork(link))
+            for i in range(n)]
+
+
+def test_multi_gpu_scaling_sustains_3x_sessions():
+    """Appendix E scale-out: at a fixed mIoU floor, a 4-GPU pool must carry
+    >= 3x the sessions of one GPU under the fair policy."""
+    target = 0.84
+
+    def sustained(n_gpus, counts):
+        best = 0
+        for n in counts:
+            r = ServingEngine(
+                _scale_fleet(n), policy="fair",
+                cfg=ServingConfig(duration=240.0, max_queue=32,
+                                  n_gpus=n_gpus)).run()
+            if r["mean_miou"] >= target:
+                best = max(best, n)
+        return best
+
+    s1 = sustained(1, (8, 12))
+    s4 = sustained(4, (24, 28))
+    assert s1 > 0
+    assert s4 >= 3 * s1, f"scaled {s1} -> {s4} sessions (< 3x)"
+
+
+def test_affinity_beats_blind_assignment_at_saturation():
+    """Same gain ranking, different placement: residency-aware assignment
+    pays less migration tax, so it serves more phases at better freshness."""
+    results = {}
+    for pol in ("gain", "affinity"):
+        results[pol] = ServingEngine(
+            _scale_fleet(24), policy=pol,
+            cfg=ServingConfig(duration=240.0, max_queue=32, n_gpus=4)).run()
+    blind, aware = results["gain"], results["affinity"]
+    assert aware["migrations"] < blind["migrations"]
+    assert aware["migration_s_total"] < blind["migration_s_total"]
+    assert (aware["mean_miou"] > blind["mean_miou"]
+            or aware["phases_served"] > blind["phases_served"])
+    # every phase ran somewhere in the pool, and the pool was really a pool
+    assert set(g for dev in aware["devices_per_client"] for g in dev) > {0}
+
+
+# ---------------- gain-aware admission: park the lowest phi ----------------
+
+
+def test_admission_parks_lowest_phi_not_newest():
+    """Oversubscribed pool: the near-static sessions are parked, not
+    whichever sessions happen to be indexed last (the PR-1 rule would have
+    admitted the four static head clients and rejected every dynamic one)."""
+    fleet = [StubSession(i, rate=0.15 if i < 4 else 1.0,
+                         net=ClientNetwork(LinkSpec()))
+             for i in range(8)]
+    r = ServingEngine(fleet, policy="fair",
+                      cfg=ServingConfig(duration=60.0,
+                                        admission_util_cap=0.5)).run()
+    admitted = {s.idx for s in fleet if s.admitted}
+    assert admitted and admitted <= {4, 5, 6, 7}  # only dynamic feeds fit
+    assert r["parked_clients"] == sorted(set(range(8)) - admitted)
+    parked = [s for s in fleet if not s.admitted]
+    assert all(s.phases == 0 for s in parked)  # inference-only
+    assert all(s.mious for s in parked)  # still measured (decay = signal)
+
+
+# ---------------- modeled ASR rate-control + delta compression ----------------
+
+
+class _RateShiftSession(StubSession):
+    """The server's ASR doubles the rate after the first phase — only a
+    delivered rate_ctrl message may move the edge's sampling clock."""
+
+    def train(self, t):
+        delta = super().train(t)
+        if delta is not None:
+            self.sampling_rate = 2.0
+        return delta
+
+
+def test_asr_rate_ctrl_rides_the_downlink():
+    def run(ctrl_bytes):
+        fleet = [_RateShiftSession(i, rate=1.0, net=ClientNetwork(LinkSpec()))
+                 for i in range(3)]
+        r = ServingEngine(fleet, policy="fair",
+                          cfg=ServingConfig(duration=60.0,
+                                            asr_ctrl_bytes=ctrl_bytes)).run()
+        return fleet, r
+
+    free_fleet, free = run(0)
+    ctrl_fleet, ctrl = run(64)
+    assert all(s._edge_rate is None for s in free_fleet)  # PR-1: instant
+    # the server-side rate shift really crossed the downlink
+    assert all(s.sampling_rate == 2.0 for s in ctrl_fleet)
+    assert all(s._edge_rate == 2.0 for s in ctrl_fleet)
+    assert ctrl["mean_down_kbps"] > free["mean_down_kbps"]  # bytes charged
+    assert ctrl["events_processed"] > free["events_processed"]  # rate_ctrl evs
+
+
+def test_delta_compression_charges_the_device_clock():
+    def run(s_per_mb):
+        cost = GPUCostModel(delta_comp_s_per_mb=s_per_mb)
+        return ServingEngine(_stub_fleet(4), policy="fair", cost=cost,
+                             cfg=ServingConfig(duration=60.0)).run()
+
+    free, comp = run(0.0), run(25.0)  # 20 KB stub delta -> 0.5 s on-device
+    assert comp["gpu_utilization"] > free["gpu_utilization"]
+    assert comp["mean_down_kbps"] > 0.0  # deltas still delivered, just later
+    assert comp["events_processed"] > free["events_processed"]  # gpu_free evs
+
+
 # ---------------- edge client double-buffering ----------------
 
 
@@ -289,3 +597,22 @@ def test_run_multiclient_shim_contract():
     # deltas crossed a modeled link: bytes were charged and time passed
     assert r["mean_down_kbps"] > 0.0
     assert r["delta_latency_mean_s"] > 0.0
+
+
+def test_run_multiclient_gpu_pool_kwargs():
+    from repro.core.server import AMSConfig
+    from repro.models.seg.student import SegConfig, make_student
+    from repro.sim.multiclient import run_multiclient
+
+    seg = SegConfig(n_classes=5)
+    pre = make_student(seg, jax.random.PRNGKey(0))
+    ams = AMSConfig(t_update=8.0, t_horizon=30.0, k_iters=2, batch_size=2,
+                    gamma=0.05, lr=2e-3, phi_target=0.15)
+    r = run_multiclient(3, pre, seg, ams, duration=25.0,
+                        video_kw=dict(height=24, width=24, fps=2.0),
+                        n_gpus=2, affinity=True)
+    assert r["n_gpus"] == 2 and r["scheduler"] == "affinity"
+    assert len(r["per_gpu_utilization"]) == 2
+    assert np.isfinite(r["mean_miou"])
+    # real sessions report a real (weights+opt+buffer) migration footprint
+    assert all(g in (0, 1) for dev in r["devices_per_client"] for g in dev)

@@ -11,13 +11,18 @@ so the numbers are pure engine/scheduler behaviour. Two questions:
      it shares a score with (migration time avoided -> phases + freshness)?
 
 Emits ``BENCH_serving.json`` (sessions sustained, sessions-per-GPU, the
-affinity comparison) next to the repo root so future PRs can track the
-trajectory. ``--smoke`` is the CI entry point: ``--smoke`` alone is the
-PR-1 single-GPU engine smoke; ``--smoke --gpus 4`` additionally asserts
->=3x sustained-session scaling from 1 -> 4 GPUs under the fair policy and
-that affinity beats blind assignment.
+affinity comparison, the fused-training section) next to the repo root so
+future PRs can track the trajectory. ``--smoke`` is the CI entry point:
+``--smoke`` alone is the PR-1 single-GPU engine smoke; ``--smoke --gpus 4``
+additionally asserts >=3x sustained-session scaling from 1 -> 4 GPUs under
+the fair policy and that affinity beats blind assignment; ``--smoke
+--fused`` asserts that coalesced stacked train launches (fuse_train, priced
+by the sublinear `GPUCostModel.train_batch_s`) sustain MORE sessions on one
+GPU than the sequential engine, and that the real-math fused wall-clock for
+8 seg sessions x one phase is <= 0.6x sequential.
 
-Run: PYTHONPATH=src python -m benchmarks.serving_scale [--smoke] [--gpus 4]
+Run: PYTHONPATH=src python -m benchmarks.serving_scale [--smoke]
+     [--gpus 4] [--fused]
 """
 from __future__ import annotations
 
@@ -57,27 +62,48 @@ def make_stub_fleet(n: int, *, stationary_frac: float = 0.3,
 
 
 def run_fleet(n: int, *, n_gpus: int = 1, policy: str = "fair",
-              duration: float = 240.0, max_queue: int = 32) -> dict:
+              duration: float = 240.0, max_queue: int = 32,
+              fuse_train: int = 1) -> dict:
     engine = ServingEngine(
         make_stub_fleet(n), policy=policy, cost=GPUCostModel(),
         cfg=ServingConfig(duration=duration, max_queue=max_queue,
-                          n_gpus=n_gpus))
+                          n_gpus=n_gpus, fuse_train=fuse_train))
     return engine.run()
 
 
 def sessions_sustained(n_gpus: int, *, policy: str = "fair",
                        counts=(4, 8, 12, 16, 20, 24, 28, 32),
                        duration: float = 240.0,
-                       target: float = TARGET_MIOU) -> tuple[int, dict]:
+                       target: float = TARGET_MIOU,
+                       fuse_train: int = 1) -> tuple[int, dict]:
     """Largest fleet in ``counts`` whose mean mIoU holds ``target`` on an
     ``n_gpus`` pool (0 if even the smallest fleet degrades past it)."""
     best, per_count = 0, {}
     for n in counts:
-        r = run_fleet(n, n_gpus=n_gpus, policy=policy, duration=duration)
+        r = run_fleet(n, n_gpus=n_gpus, policy=policy, duration=duration,
+                      fuse_train=fuse_train)
         per_count[n] = r
         if r["mean_miou"] >= target:
             best = max(best, n)
     return best, per_count
+
+
+def _write_bench(update: dict) -> None:
+    """Merge ``update`` into BENCH_serving.json (the pool sweep and the
+    fused-training sweep each own different keys; neither clobbers the
+    other's section)."""
+    bench = {}
+    if os.path.exists(BENCH_PATH):
+        try:
+            with open(BENCH_PATH) as f:
+                bench = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            bench = {}
+    bench.update(update)
+    with open(BENCH_PATH, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(BENCH_PATH)}")
 
 
 def run(counts=None, duration: float | None = None, policy: str = "gain",
@@ -155,11 +181,45 @@ def run_pool_sweep(max_gpus: int = 4, *, counts=None, duration: float = 240.0,
         "affinity_at_max_gpus": {"n_clients": affinity_n,
                                  "n_gpus": max_gpus, **affinity_cmp},
     }
-    with open(BENCH_PATH, "w") as f:
-        json.dump(bench, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"wrote {os.path.normpath(BENCH_PATH)}")
+    _write_bench(bench)
     return bench
+
+
+def run_fused_sweep(fuse: int = 4, *, counts=(8, 10, 12, 14, 16, 20),
+                    duration: float = 240.0) -> dict:
+    """Fused cross-session training on ONE GPU: sessions sustained at the
+    target mIoU with coalesced stacked launches (`fuse_train`) vs the
+    sequential engine, under the batched-launch cost model
+    (`GPUCostModel.train_batch_s`) — plus the real-math wall-clock compare
+    from `kernels_bench`. Updates the ``fused_training`` section of
+    BENCH_serving.json."""
+    from benchmarks.kernels_bench import fused_phase_compare
+
+    with Timer() as t:
+        seq_best, _ = sessions_sustained(1, counts=counts, duration=duration)
+        fused_best, per_count = sessions_sustained(
+            1, counts=counts, duration=duration, fuse_train=fuse)
+    peak = per_count[max(fused_best, counts[0])]
+    emit(f"serving_scale.fused.g1.f{fuse}", t.us,
+         f"sustained_seq={seq_best};sustained_fused={fused_best};"
+         f"target_miou={TARGET_MIOU};"
+         f"fused_launches_at_peak={peak['fused_launches']};"
+         f"riders_at_peak={peak['rider_grants']}")
+    wall = fused_phase_compare()
+    bench = {
+        "fused_training": {
+            "fuse_train": fuse,
+            "duration_s": duration,
+            "target_miou": TARGET_MIOU,
+            "sessions_sustained_1gpu": {"sequential": seq_best,
+                                        "fused": fused_best},
+            "fused_launches_at_peak": peak["fused_launches"],
+            "rider_grants_at_peak": peak["rider_grants"],
+            "wallclock_8_sessions_1_phase": wall,
+        }
+    }
+    _write_bench(bench)
+    return bench["fused_training"]
 
 
 def main() -> None:
@@ -170,8 +230,28 @@ def main() -> None:
                     choices=("fair", "edf", "gain", "affinity"))
     ap.add_argument("--gpus", type=int, default=1,
                     help="pool size; >1 runs the GPU-count sweep")
+    ap.add_argument("--fused", action="store_true",
+                    help="fused cross-session training sweep: sessions "
+                         "sustained on 1 GPU with coalesced stacked "
+                         "launches + real-math wall-clock compare")
     ap.add_argument("--duration", type=float, default=None)
     args = ap.parse_args()
+    if args.smoke and args.fused:
+        fb = run_fused_sweep()
+        seq = fb["sessions_sustained_1gpu"]["sequential"]
+        fus = fb["sessions_sustained_1gpu"]["fused"]
+        assert seq > 0, "sequential 1-GPU engine sustains nothing"
+        assert fus > seq, (
+            f"fused training should sustain more sessions on one GPU "
+            f"(got {fus} vs sequential {seq})")
+        ratio = fb["wallclock_8_sessions_1_phase"]["ratio"]
+        assert ratio <= 0.6, (
+            f"fused wall-clock for 8 sessions x 1 phase is {ratio:.2f}x "
+            f"sequential; expected <= 0.6x")
+        print(f"serving_scale fused smoke OK (sustained {seq} -> {fus} "
+              f"sessions on 1 GPU, wall-clock {ratio:.2f}x)")
+        print("serving_scale smoke OK")
+        return
     if args.smoke:
         if args.gpus <= 1:  # the pool smoke below is its own gate; don't
             # repeat the single-GPU sweep ci.sh already ran separately
@@ -198,6 +278,8 @@ def main() -> None:
         run(duration=args.duration, policy=args.policy)
         if args.gpus > 1:
             run_pool_sweep(args.gpus, duration=args.duration or 240.0)
+        if args.fused:
+            run_fused_sweep(duration=args.duration or 240.0)
 
 
 if __name__ == "__main__":

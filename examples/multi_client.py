@@ -24,6 +24,8 @@ def main():
                     help="server GPU pool size")
     ap.add_argument("--affinity", action="store_true",
                     help="residency-aware (session, gpu) placement")
+    ap.add_argument("--fuse-train", type=int, default=1,
+                    help="max co-resident sessions per fused train launch")
     ap.add_argument("--up-kbps", type=float, default=1000.0)
     ap.add_argument("--down-kbps", type=float, default=2000.0)
     args = ap.parse_args()
@@ -36,7 +38,7 @@ def main():
     out = run_multiclient(args.clients, pre, seg_cfg, ams, duration=args.duration,
                           video_kw=dict(height=48, width=48, fps=4.0),
                           policy=args.policy, n_gpus=args.gpus,
-                          affinity=args.affinity,
+                          affinity=args.affinity, fuse_train=args.fuse_train,
                           link=LinkSpec(up_kbps=args.up_kbps, down_kbps=args.down_kbps))
     print(f"clients={out['n_clients']} policy={out['scheduler']} "
           f"gpus={out['n_gpus']} "
@@ -51,6 +53,10 @@ def main():
         print(f"pool: per-gpu util {utils}; migrations={out['migrations']} "
               f"({out['migration_s_total']:.1f} s); "
               f"evictions={out['residency_evictions']}")
+    if out["fused_launches"]:
+        print(f"fused training: {out['fused_launches']} stacked launches "
+              f"covering {out['fused_sessions']} sessions "
+              f"({out['rider_grants']} riders)")
     for i, (m, (up, down), ph, dev) in enumerate(zip(out["miou_per_client"],
                                                      out["per_client_kbps"],
                                                      out["phases_per_client"],

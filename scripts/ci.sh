@@ -28,6 +28,14 @@ echo "== multi-GPU serving smoke: benchmarks.serving_scale --smoke --gpus 4 =="
 python -m benchmarks.serving_scale --smoke --gpus 4
 pool_smoke=$?
 
-echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke"
-[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && echo "CI OK"
-exit $((tier1 | smoke | pool_smoke))
+echo "== fused-training smoke: benchmarks.serving_scale --smoke --fused =="
+# asserts coalesced stacked train launches sustain MORE sessions on 1 GPU
+# than the sequential engine, and that the real-math fused wall-clock for
+# 8 seg sessions x one phase is <= 0.6x sequential; updates the
+# fused_training section of BENCH_serving.json
+python -m benchmarks.serving_scale --smoke --fused
+fused_smoke=$?
+
+echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke"
+[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && echo "CI OK"
+exit $((tier1 | smoke | pool_smoke | fused_smoke))

@@ -1,0 +1,250 @@
+"""Fused cross-session training: stacked vmap/scan execution of train phases.
+
+Every AMS session of a given task shares one pytree structure (the student),
+so B co-resident sessions' training phases need not be B separate K-iteration
+dispatch loops: stack their ``(params, opt_state, mask, replay_batches)``
+along a leading session axis (struct-of-arrays), run ``jax.lax.scan`` over
+the K inner iterations of a ``jax.vmap``-ed loss/masked-optimizer step, and
+unstack the results back into per-session state. One compiled executable —
+cached at module level by (loss fn, shape-dtype struct, K, optimizer,
+hyperparameters) and therefore shared by every same-shaped session in the
+process — replaces ``B x K`` separate launches.
+
+Numerics: the stacked executable agrees with the sequential
+``AMSSession.train_phase`` to float32 tolerance (vmap batches the
+convolutions differently, and XLA fuses the optimizer math into the backward
+pass). A *singleton* group therefore runs the sequential step code itself —
+bitwise-identical to ``train_phase`` by construction — so fusing is a pure
+opt-in: with coalescing disabled every phase is a singleton and nothing
+changes, to the bit.
+
+Execution mode: on accelerator backends the K iterations live inside the
+executable as a ``lax.scan`` (one launch per phase). XLA:CPU, however, runs
+while-loop bodies on a single thread — measured ~4x slower than the same
+math dispatched step-by-step — so on CPU the cached executable is the
+vmapped *step* and the K-loop stays in Python: still one compile and one
+launch per iteration for the whole stack, instead of B. ``set_exec_mode``
+overrides the auto-detection (benchmarks/tests).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Hashable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masked_adam import masked_adam_update, momentum_update
+
+# ---------------------------------------------------------------------------
+# struct-of-arrays stack / unstack
+# ---------------------------------------------------------------------------
+
+
+def stack_trees(trees: list):
+    """Stack B same-structure pytrees along a new leading session axis."""
+    if not trees:
+        raise ValueError("stack_trees needs at least one tree")
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+
+def unstack_tree(tree, n: int) -> list:
+    """Inverse of `stack_trees`: split the leading axis back into B trees."""
+    return [jax.tree.map(lambda l: l[i], tree) for i in range(n)]
+
+
+def tree_struct(tree) -> Hashable:
+    """Hashable shape/dtype/structure fingerprint of a pytree — the part of
+    a compile key that decides whether two sessions can share an executable."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return (treedef,
+            tuple((tuple(l.shape), jnp.asarray(l).dtype.name) for l in leaves))
+
+
+# ---------------------------------------------------------------------------
+# module-level fused-phase executable cache
+# ---------------------------------------------------------------------------
+
+_PHASE_CACHE: dict = {}
+_HITS = 0
+_MISSES = 0
+
+_EXEC_MODE = "auto"  # "auto" | "scan" | "loop"
+
+
+def set_exec_mode(mode: str) -> None:
+    """Force the phase-executable shape: ``scan`` (K iterations inside one
+    ``lax.scan`` launch — accelerator default), ``loop`` (one vmapped-step
+    launch per iteration — CPU default, where XLA runs loop bodies
+    single-threaded), or ``auto``. Cached executables for the other mode are
+    kept; the key includes the resolved mode."""
+    if mode not in ("auto", "scan", "loop"):
+        raise ValueError(f"exec mode must be auto|scan|loop, got {mode!r}")
+    global _EXEC_MODE
+    _EXEC_MODE = mode
+
+
+def _resolved_mode() -> str:
+    if _EXEC_MODE != "auto":
+        return _EXEC_MODE
+    return "loop" if jax.default_backend() == "cpu" else "scan"
+
+
+def cache_info() -> dict:
+    """Hook for tests/telemetry: how often did sessions share an executable?"""
+    return {"size": len(_PHASE_CACHE), "hits": _HITS, "misses": _MISSES}
+
+
+def cache_clear() -> None:
+    global _HITS, _MISSES
+    _PHASE_CACHE.clear()
+    _HITS = _MISSES = 0
+
+
+def _build_phase_fn(loss_and_grad, optimizer: str, lr: float, b1: float,
+                    b2: float, eps: float, momentum: float, mode: str):
+    """The fused executable: K iterations of a vmapped step.
+
+    Signature: ``(params, opt_state, mask, frames, labels)`` where every tree
+    leaf carries a leading session axis B and frames/labels are shaped
+    ``(K, B, batch, ...)``. Returns stacked ``(params, opt_state, u_last,
+    loss_last)`` with ``loss_last`` of shape (B,). ``mode="scan"`` compiles
+    the whole phase into one launch; ``mode="loop"`` compiles the step once
+    and dispatches it K times (see module docstring for why CPU wants this).
+    """
+
+    def step(p, st, m, f, l):
+        loss, grads = loss_and_grad(p, f, l)
+        if optimizer == "adam":
+            p, st, u = masked_adam_update(p, grads, st, m,
+                                          lr=lr, b1=b1, b2=b2, eps=eps)
+        else:
+            p, st, u = momentum_update(p, grads, st, m,
+                                       lr=lr, momentum=momentum)
+        return p, st, u, loss
+
+    vstep = jax.vmap(step)
+
+    if mode == "loop":
+        jstep = jax.jit(vstep)
+
+        def phase(params, opt_state, mask, frames, labels):
+            for k in range(frames.shape[0]):
+                params, opt_state, u, loss = jstep(params, opt_state, mask,
+                                                   frames[k], labels[k])
+            return params, opt_state, u, loss
+
+        return phase
+
+    @jax.jit
+    def phase(params, opt_state, mask, frames, labels):
+        u0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+        def body(carry, xs):
+            p, st, _ = carry
+            f, l = xs
+            p, st, u, loss = vstep(p, st, mask, f, l)
+            return (p, st, u), loss
+
+        (params, opt_state, u), losses = jax.lax.scan(
+            body, (params, opt_state, u0), (frames, labels))
+        return params, opt_state, u, losses[-1]
+
+    return phase
+
+
+def fused_phase_fn(loss_and_grad, *, struct: Hashable, k_iters: int,
+                   optimizer: str, lr: float, b1: float, b2: float,
+                   eps: float, momentum: float):
+    """The cached stacked-phase executable for one compile key.
+
+    Keyed by the loss callable itself (sessions built from the same task
+    share it — see `sim.seg_world`'s per-config compile cache), the stacked
+    shape-dtype struct, K, and the optimizer recipe: N same-shaped sessions
+    cost one compile, not N.
+    """
+    global _HITS, _MISSES
+    mode = _resolved_mode()
+    key = (loss_and_grad, struct, k_iters, optimizer, lr, b1, b2, eps,
+           momentum, mode)
+    fn = _PHASE_CACHE.get(key)
+    if fn is None:
+        _MISSES += 1
+        fn = _build_phase_fn(loss_and_grad, optimizer, lr, b1, b2, eps,
+                             momentum, mode)
+        _PHASE_CACHE[key] = fn
+    else:
+        _HITS += 1
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# fused phase over live sessions
+# ---------------------------------------------------------------------------
+
+
+def _group_key(s, mask, frames, labels) -> Hashable:
+    cfg = s.cfg
+    return (s.task.loss_and_grad,
+            tree_struct((s.params, s.opt_state, mask)),
+            cfg.k_iters, cfg.optimizer, cfg.lr, cfg.b1, cfg.b2, cfg.eps,
+            cfg.momentum,
+            tuple(frames.shape), str(frames.dtype),
+            tuple(labels.shape), str(labels.dtype))
+
+
+def train_phases_fused(sessions: list, t_now: float,
+                       force_stack: bool = False) -> list:
+    """Run one training phase for several sessions as fused launches.
+
+    Per-session host-side work (mask selection, replay sampling, delta
+    encoding, ASR/ATR bookkeeping) happens in session order, consuming each
+    session's RNG streams exactly as its own ``train_phase`` would. Sessions
+    that share a compile key — same loss callable, shapes, K, optimizer —
+    are stacked and executed as ONE scan/vmap launch; a session with nothing
+    to train yields None in its slot, exactly like ``train_phase``.
+
+    Singleton groups take the sequential step path (bitwise-identical to
+    ``train_phase``); pass ``force_stack=True`` to push even B=1 through the
+    stacked executable (benchmarks/tests only).
+    """
+    results: dict[int, object] = {}
+    groups: dict[Hashable, list] = defaultdict(list)
+    for i, s in enumerate(sessions):
+        prep = s._prepare_phase(t_now)
+        if prep is None:
+            results[i] = None
+            continue
+        mask, frames, labels = prep
+        groups[_group_key(s, mask, frames, labels)].append(
+            (i, s, mask, frames, labels))
+
+    for members in groups.values():
+        if len(members) == 1 and not force_stack:
+            i, s, mask, frames, labels = members[0]
+            results[i] = s._run_phase_prepared(t_now, mask, frames, labels)
+            continue
+        ss = [m[1] for m in members]
+        params = stack_trees([s.params for s in ss])
+        opt = stack_trees([s.opt_state for s in ss])
+        mask = stack_trees([m[2] for m in members])
+        # batches: per-session (K, batch, ...) -> scan-major (K, B, batch, ...)
+        frames = jnp.stack([m[3] for m in members], axis=1)
+        labels = jnp.stack([m[4] for m in members], axis=1)
+        s0 = ss[0]
+        phase = fused_phase_fn(
+            s0.task.loss_and_grad,
+            struct=tree_struct((params, opt, mask)),
+            k_iters=s0.cfg.k_iters, optimizer=s0.cfg.optimizer,
+            lr=s0.cfg.lr, b1=s0.cfg.b1, b2=s0.cfg.b2, eps=s0.cfg.eps,
+            momentum=s0.cfg.momentum)
+        params, opt, u, losses = phase(params, opt, mask, frames, labels)
+        losses = np.asarray(losses)
+        b = len(members)
+        for j, (i, s, m, _, _), p_j, o_j, u_j in zip(
+                range(b), members, unstack_tree(params, b),
+                unstack_tree(opt, b), unstack_tree(u, b)):
+            results[i] = s._commit_phase(t_now, p_j, o_j, u_j,
+                                         float(losses[j]), m)
+    return [results[i] for i in range(len(sessions))]

@@ -24,6 +24,16 @@ import jax
 import jax.numpy as jnp
 
 
+def tree_unzip(out, n: int) -> tuple:
+    """Split a pytree of n-tuples (the shape a multi-output `jax.tree.map`
+    produces) into n parallel pytrees. Shared by the update rules here and by
+    `core.batched`'s stacked phase executor."""
+    is_leaf = lambda t: isinstance(t, tuple)  # noqa: E731
+    return tuple(
+        jax.tree.map(lambda t, i=i: t[i], out, is_leaf=is_leaf) for i in range(n)
+    )
+
+
 class MaskedAdamState(NamedTuple):
     m: Any  # first-moment pytree (like params)
     v: Any  # second-moment pytree
@@ -60,11 +70,7 @@ def masked_adam_update(
         return p_new, m_new.astype(m.dtype), v_new.astype(v.dtype), u
 
     out = jax.tree.map(upd, params, grads, state.m, state.v, mask)
-    # out is a pytree of 4-tuples; transpose it
-    params_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
-    m_new = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
-    v_new = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
-    u = jax.tree.map(lambda t: t[3], out, is_leaf=lambda t: isinstance(t, tuple))
+    params_new, m_new, v_new, u = tree_unzip(out, 4)
     return params_new, MaskedAdamState(m_new, v_new, i), u
 
 
@@ -95,7 +101,5 @@ def momentum_update(params, grads, state: MomentumState, mask=None, *, lr=1e-3, 
         return p_new, vel_new, u
 
     out = jax.tree.map(upd, params, grads, state.velocity, mask)
-    params_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
-    vel = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
-    u = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    params_new, vel, u = tree_unzip(out, 3)
     return params_new, MomentumState(vel), u

@@ -22,6 +22,13 @@ class GPUCostModel:
     # top-gamma% delta selection + entropy coding runs on the device after a
     # phase (paper §3.1.2); 0.0 keeps the seed/PR-1 behavior (free)
     delta_comp_s_per_mb: float = 0.0
+    # fused cross-session training (core.batched): B co-resident sessions'
+    # phases run as one stacked scan/vmap launch — a setup charge plus a
+    # sublinear per-session marginal cost (no B x K dispatch overhead, better
+    # device occupancy). B=1 is exactly the solo cost, so an unfused engine
+    # is bit-identical.
+    train_batch_setup_s: float = 0.05
+    train_batch_discount: float = 0.45
 
     @property
     def phase_s(self) -> float:  # K=20 iterations
@@ -35,6 +42,21 @@ class GPUCostModel:
             return 0.0
         return (self.label_batch_overhead_s
                 + n_frames * self.teacher_infer_s * self.label_batch_discount)
+
+    def train_batch_s(self, n_sessions: int, k_iters: int) -> float:
+        """One fused launch training ``n_sessions`` co-resident sessions for
+        ``k_iters`` iterations each: a stacking setup charge, the first
+        session at full price, and each additional rider at a discounted
+        *marginal* cost (the stacked executable replaces B x K dispatches
+        with one launch and fills the device better). Exactly the sequential
+        cost at B=1, so an unfused engine stays bit-identical."""
+        if n_sessions <= 0:
+            return 0.0
+        solo = k_iters * self.train_iter_s
+        if n_sessions == 1:
+            return solo
+        return (self.train_batch_setup_s + solo
+                + (n_sessions - 1) * solo * self.train_batch_discount)
 
     def delta_comp_s(self, nbytes: int) -> float:
         """GPU time to select/compress one ModelDelta of ``nbytes``."""

@@ -105,9 +105,17 @@ class AMSSession:
 
     # ---------------- inference phase (Algorithm 1, lines 5-9) -----------
     def receive_frames(self, frames, t_now: float) -> None:
-        """Label new sample frames with the teacher; feed buffer + φ-score."""
-        for frame in frames:
-            label = np.asarray(self.task.teacher(frame[None])[0])
+        """Label new sample frames with the teacher; feed buffer + φ-score.
+
+        The teacher runs ONCE over the stacked batch (one launch instead of
+        one per frame); the φ-score ingest stays sequential — it compares
+        consecutive labels, so order matters."""
+        frames = list(frames)
+        if not frames:
+            self.asr.maybe_update(t_now)
+            return
+        labels = np.asarray(self.task.teacher(np.stack(frames)))
+        for frame, label in zip(frames, labels):
             self._ingest(frame, label, t_now)
         self.asr.maybe_update(t_now)
 
@@ -136,18 +144,34 @@ class AMSSession:
             cfg.strategy, params=self.params, u_prev=self.u_prev, frac=cfg.gamma, rng=k
         )
 
-    def train_phase(self, t_now: float) -> ModelDelta | None:
+    def _prepare_phase(self, t_now: float):
+        """Host-side phase setup: select the coordinate mask and draw all K
+        replay minibatches, consuming the session RNGs exactly as the
+        sequential loop does. Returns ``(mask, frames, labels)`` with
+        frames/labels stacked as (K, batch, ...), or None when there is
+        nothing to train on."""
         cfg = self.cfg
         if len(self.buffer) == 0:
             return None
         mask = self._select_mask()
-        params, opt_state, u = self.params, self.opt_state, None
+        batches = []
         for _ in range(cfg.k_iters):
             batch = self.buffer.sample(self.rng, cfg.batch_size, t_now)
-            if batch is None:
+            if batch is None:  # empty horizon window: jrng consumed, no train
                 return None
-            frames, labels = batch
-            loss, grads = self.task.loss_and_grad(params, frames, labels)
+            batches.append(batch)
+        frames = np.stack([b[0] for b in batches])
+        labels = np.stack([b[1] for b in batches])
+        return mask, frames, labels
+
+    def _run_phase_prepared(self, t_now: float, mask, frames,
+                            labels) -> ModelDelta:
+        """The sequential K-iteration loop over prepared batches (the
+        reference numerics; `core.batched` runs the same phase stacked)."""
+        cfg = self.cfg
+        params, opt_state, u = self.params, self.opt_state, None
+        for k in range(cfg.k_iters):
+            loss, grads = self.task.loss_and_grad(params, frames[k], labels[k])
             if cfg.optimizer == "adam":
                 params, opt_state, u = masked_adam_update(
                     params, grads, opt_state, mask,
@@ -157,6 +181,13 @@ class AMSSession:
                 params, opt_state, u = momentum_update(
                     params, grads, opt_state, mask, lr=cfg.lr, momentum=cfg.momentum
                 )
+        return self._commit_phase(t_now, params, opt_state, u, float(loss), mask)
+
+    def _commit_phase(self, t_now: float, params, opt_state, u, loss: float,
+                      mask) -> ModelDelta:
+        """Adopt a finished phase's state and produce the wire delta — shared
+        tail of the sequential and fused paths."""
+        cfg = self.cfg
         self.params, self.opt_state, self.u_prev = params, opt_state, u
         self.phase += 1
         delta = encode_delta(params, mask, cfg.value_dtype)
@@ -169,6 +200,12 @@ class AMSSession:
              "rate": self.asr.rate, "t_update": self.t_update}
         )
         return delta
+
+    def train_phase(self, t_now: float) -> ModelDelta | None:
+        prep = self._prepare_phase(t_now)
+        if prep is None:
+            return None
+        return self._run_phase_prepared(t_now, *prep)
 
     @property
     def sampling_rate(self) -> float:

@@ -58,13 +58,18 @@ from repro.serving.policies import (
     make_policy,
 )
 from repro.serving.resources import GPUDevice, GPUPool, MigrationModel
-from repro.serving.session import SegServingSession, SessionBase, StubSession
+from repro.serving.session import (
+    SegServingSession,
+    SessionBase,
+    StubSession,
+    train_many,
+)
 
 __all__ = [
     "Event", "EventQueue", "ClientNetwork", "Link", "LinkSpec",
     "SchedulingPolicy", "FairRoundRobin", "EarliestDeadlineFirst",
     "GainAware", "AffinityAware", "Assignment", "GPURequest", "POLICIES",
     "make_policy", "GPUDevice", "GPUPool", "MigrationModel",
-    "SegServingSession", "SessionBase", "StubSession",
+    "SegServingSession", "SessionBase", "StubSession", "train_many",
     "ServingConfig", "ServingEngine",
 ]

@@ -16,7 +16,11 @@ lifecycle of one update period, in events:
                        session's state if it is not resident (migration time
                        on that device's clock), labels the queued backlog in
                        one batched teacher launch, then runs the session's
-                       K-iteration training phase
+                       K-iteration training phase. With ``fuse_train > 1``
+                       the grant also takes up to fuse_train-1 ready *riders*
+                       already resident on that device: the whole stack
+                       trains as ONE fused scan/vmap launch (`core.batched`)
+                       priced sublinearly by `GPUCostModel.train_batch_s`
     gpu_done  (gpu g)  the phase ends on device g; the fresh ModelDelta is
                        compressed on g's clock (delta_comp_s, optional) and
                        ships over the client's downlink, followed by the ASR
@@ -45,6 +49,7 @@ from repro.core.scheduler import GPUCostModel
 from repro.serving.events import EventQueue
 from repro.serving.policies import GPURequest, SchedulingPolicy, make_policy
 from repro.serving.resources import GPUPool, MigrationModel
+from repro.serving.session import train_many
 
 
 def _phi_of(session) -> float:
@@ -66,6 +71,12 @@ class ServingConfig:
     residency_cap: int | None = None  # sessions resident per device (None: HBM unbounded)
     # ---- fidelity knobs (0 == unmodeled, the PR-1 behavior) --------------
     asr_ctrl_bytes: int = 0  # rate-control message on the downlink
+    # ---- fused cross-session training (core.batched) ---------------------
+    # max sessions per stacked train launch: a granted device also takes up
+    # to fuse_train-1 ready "riders" that cost nothing to stage there, and
+    # runs the whole stack as one scan/vmap executable priced by
+    # `GPUCostModel.train_batch_s`. 1 == coalescing off, PR-2 bit-identical.
+    fuse_train: int = 1
 
 
 @dataclass
@@ -104,6 +115,8 @@ class ServingEngine:
         self.label_batches = 0
         self.labels_total = 0
         self.max_backlog = 0
+        self.fused_launches = 0  # grants that carried >= 1 rider
+        self.fused_sessions = 0  # sessions trained inside those launches
 
     # ---- admission control ---------------------------------------------
     def _admit_sessions(self) -> None:
@@ -127,8 +140,14 @@ class ServingEngine:
                 label_s = self.cost.label_batch_s(est_frames)
             else:
                 label_s = est_frames * self.cost.teacher_infer_s
-            rho.append((label_s + s.k_iters * self.cost.train_iter_s)
-                       / max(s.t_update, 1e-9))
+            fuse = max(self.cfg.fuse_train, 1)
+            if fuse > 1:
+                # project the amortized per-session share of a full fused
+                # launch — the same sublinear cost the grants will pay
+                train_s = self.cost.train_batch_s(fuse, s.k_iters) / fuse
+            else:
+                train_s = s.k_iters * self.cost.train_iter_s
+            rho.append((label_s + train_s) / max(s.t_update, 1e-9))
         if budget is None:  # index order: keeps the load sum bit-identical
             order = range(len(self.sessions))
         else:
@@ -222,10 +241,25 @@ class ServingEngine:
             return
         assignments = self.policy.assign(
             t, list(ready.values()), free, self.pool)
+        taken = [a.req for a in assignments]
         for a in assignments:
+            riders = []
+            if self.cfg.fuse_train > 1:
+                # fill the stacked launch: ready requests not claimed this
+                # round that are free to train on the granted device
+                leftover = [r for r in ready.values()
+                            if not any(r is x for x in taken)]
+                riders = self.policy.coalesce(t, a, leftover, self.pool,
+                                              self.cfg.fuse_train)
+                taken.extend(riders)
             backlog = next(b for b in self._queue if b.req is a.req)
             self._queue.remove(backlog)
-            self._start_service(t, backlog, a.gpu)
+            rider_backlogs = []
+            for r in riders:
+                rb = next(b for b in self._queue if b.req is r)
+                self._queue.remove(rb)
+                rider_backlogs.append(rb)
+            self._start_service(t, backlog, a.gpu, rider_backlogs)
 
     def _refresh_phi(self) -> None:
         # a request's φ is snapshotted at arrival; batched labeling can move
@@ -235,15 +269,17 @@ class ServingEngine:
         for b in self._queue:
             b.req.phi = _phi_of(self.sessions[b.req.client])
 
-    def _start_service(self, t: float, backlog: _Backlog, gid: int) -> None:
+    def _start_service(self, t: float, backlog: _Backlog, gid: int,
+                       riders: list[_Backlog] | None = None) -> None:
         dev = self.pool.device(gid)
+        riders = riders or []
         # cross-client batched labeling: one launch on the granted device
         # clears every still-queued session's unlabeled frames, not just the
         # picked one (a co-granted device then finds its backlog pre-labeled)
         if self.cfg.batch_labeling:
-            to_label = [backlog] + [b for b in self._queue if b.idxs]
+            to_label = [backlog, *riders] + [b for b in self._queue if b.idxs]
         else:
-            to_label = [backlog]
+            to_label = [backlog, *riders]
         n_label = sum(len(b.idxs) for b in to_label)
         label_s = dev.cost.label_batch_s(n_label)
         if n_label:
@@ -251,46 +287,66 @@ class ServingEngine:
             self.labels_total += n_label
         # staging a non-resident session's state runs on this device's clock
         # *before* the labeling launch, so labels land at t + mig_s + label_s
+        # (riders stage for free by construction — `coalesce` only takes them)
         mig_s = self.pool.migration_s(backlog.req.client, gid,
                                       backlog.req.state_bytes)
         t_labeled = t + mig_s + label_s
         for b in to_label:
             self.sessions[b.req.client].label_and_ingest(b.idxs, t_labeled)
             b.idxs = []
-        dur = mig_s + label_s + backlog.req.k_iters * dev.cost.train_iter_s
-        backlog.req.gpu = gid
+        n_sessions = 1 + len(riders)
+        dur = (mig_s + label_s
+               + dev.cost.train_batch_s(n_sessions, backlog.req.k_iters))
         self.pool.grant(gid, backlog.req.client, t, dur, self.cfg.duration,
                         mig_s)
-        self._active.add(backlog.req.client)
-        self.q.push(t + dur, "gpu_done", backlog.req.client, gid)
+        for b in [backlog, *riders]:
+            b.req.gpu = gid
+            self._active.add(b.req.client)
+        for b in riders:
+            self.pool.attach(gid, b.req.client, t)
+        if riders:
+            self.fused_launches += 1
+            self.fused_sessions += n_sessions
+        self.q.push(t + dur, "gpu_done", backlog.req.client,
+                    (gid, tuple(b.req.client for b in riders)))
 
     def _on_gpu_done(self, ev) -> None:
-        gid = ev.payload
-        self._active.discard(ev.client)
-        s = self.sessions[ev.client]
-        delta = s.train(ev.time)
-        self.served += 1
+        gid, rider_clients = ev.payload
+        clients = [ev.client, *rider_clients]
+        for c in clients:
+            self._active.discard(c)
+        if len(clients) == 1:
+            deltas = [self.sessions[ev.client].train(ev.time)]
+        else:
+            # the stacked launch just finished: run the actual fused math
+            deltas = train_many([self.sessions[c] for c in clients], ev.time)
+        self.served += len(clients)
         t_free = ev.time
-        if delta is not None:
-            s.note_device(gid)  # a real phase ran here (no-op grants don't)
-            comp_s = self.pool.device(gid).cost.delta_comp_s(delta.total_bytes)
-            if comp_s > 0.0:
-                # the device stays busy compressing; the delta ships after
-                self.pool.extend_busy(gid, ev.time, comp_s, self.cfg.duration)
-                t_free = ev.time + comp_s
-            arrival = s.net.send_down(t_free, delta.total_bytes)
-            self.q.push(arrival, "delta", ev.client, (delta, t_free))
-        if self.cfg.asr_ctrl_bytes > 0:
-            # the ASR's new rate rides the downlink too (PR-1 modeled it as
-            # free); the edge keeps sampling at its old rate until it lands
-            arrival = s.net.send_ctrl(t_free, self.cfg.asr_ctrl_bytes)
-            self.q.push(arrival, "rate_ctrl", ev.client, float(s.sampling_rate))
+        for c, delta in zip(clients, deltas):
+            s = self.sessions[c]
+            if delta is not None:
+                s.note_device(gid)  # a real phase ran here (no-op grants don't)
+                comp_s = self.pool.device(gid).cost.delta_comp_s(
+                    delta.total_bytes)
+                if comp_s > 0.0:
+                    # the device stays busy compressing; the delta ships
+                    # after (fused deltas compress back-to-back)
+                    self.pool.extend_busy(gid, t_free, comp_s,
+                                          self.cfg.duration)
+                    t_free = t_free + comp_s
+                arrival = s.net.send_down(t_free, delta.total_bytes)
+                self.q.push(arrival, "delta", c, (delta, t_free))
+            if self.cfg.asr_ctrl_bytes > 0:
+                # the ASR's new rate rides the downlink too (PR-1 modeled it
+                # as free); the edge samples at its old rate until it lands
+                arrival = s.net.send_ctrl(t_free, self.cfg.asr_ctrl_bytes)
+                self.q.push(arrival, "rate_ctrl", c, float(s.sampling_rate))
         if t_free > ev.time:
             self.q.push(t_free, "gpu_free", ev.client, gid)
         else:
             self.pool.release(gid)
-        # schedule even while this device compresses: the finished client is
-        # eligible again and other devices may be idle
+        # schedule even while this device compresses: the finished clients
+        # are eligible again and other devices may be idle
         self._maybe_start(ev.time)
 
     def _on_gpu_free(self, ev) -> None:
@@ -358,6 +414,10 @@ class ServingEngine:
             "max_backlog": self.max_backlog,
             "label_batches": self.label_batches,
             "labels_total": self.labels_total,
+            # fused training telemetry
+            "fused_launches": self.fused_launches,
+            "fused_sessions": self.fused_sessions,
+            "rider_grants": self.pool.rider_grants,
             # pool telemetry
             "n_gpus": self.pool.n,
             "per_gpu_utilization": self.pool.utilization(cfg.duration),

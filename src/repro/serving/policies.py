@@ -92,6 +92,35 @@ class SchedulingPolicy:
         drop. Default drops the newest arrival (tail drop)."""
         return max(overfull, key=lambda r: (r.t_request, r.client))
 
+    def coalesce(self, t_now: float, granted: Assignment,
+                 ready: list[GPURequest], pool,
+                 max_fuse: int) -> list[GPURequest]:
+        """Riders for a fused grant: additional ready requests that can train
+        on ``granted.gpu`` in the SAME stacked launch (`core.batched`).
+        Eligible riders cost nothing to stage there (resident, or first
+        touch) and share the grant's iteration count, so one executable
+        covers the stack. The stack (primary + riders) is bounded by
+        ``max_fuse`` AND by the device's ``residency_cap`` — HBM that holds
+        only N session states cannot co-train more than N, and a larger
+        stack would LRU-evict its own members mid-launch. Rider *order* is a
+        policy decision (`_rider_order`); base policies take the oldest."""
+        limit = max_fuse - 1
+        cap = getattr(pool, "residency_cap", None)
+        if cap is not None:
+            limit = min(limit, cap - 1)
+        if limit <= 0:
+            return []
+        riders = [r for r in ready
+                  if r.k_iters == granted.req.k_iters
+                  and pool.migration_s(r.client, granted.gpu,
+                                       r.state_bytes) == 0.0]
+        riders.sort(key=self._rider_order(t_now))
+        return riders[:limit]
+
+    def _rider_order(self, t_now: float):
+        """Sort key ranking rider candidates (best first)."""
+        return lambda r: (r.t_request, r.client)
+
 
 class FairRoundRobin(SchedulingPolicy):
     name = "fair"
@@ -145,6 +174,11 @@ class GainAware(SchedulingPolicy):
 
     def evict(self, t_now: float, overfull: list[GPURequest]) -> GPURequest:
         return min(overfull, key=lambda r: (self._score(t_now, r), r.client))
+
+    def _rider_order(self, t_now: float):
+        """Gain-ranked riders: the stacked launch's extra slots go to the
+        highest-value eligible requests, not merely the oldest."""
+        return lambda r: (-self._score(t_now, r), r.client)
 
 
 @dataclass

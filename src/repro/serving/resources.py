@@ -86,6 +86,7 @@ class GPUPool:
         self.migrations = 0
         self.migration_s_total = 0.0
         self.evictions = 0
+        self.rider_grants = 0  # sessions co-trained via fused coalescing
 
     # ---- capacity ------------------------------------------------------
     @property
@@ -137,6 +138,18 @@ class GPUPool:
         if mig_s > 0.0:
             self.migrations += 1
             self.migration_s_total += mig_s
+        self._note_residency(gid, client, t)
+
+    def attach(self, gid: int, client: int, t: float) -> None:
+        """Residency bookkeeping for a fused *rider*: a session co-trained on
+        an already-granted device (`engine` coalescing). Riders are picked
+        for zero staging cost (resident there, or first touch), so no
+        migration is charged and the device's busy state is untouched — but
+        the session is (re-)homed and its LRU slot refreshed like any grant."""
+        self.rider_grants += 1
+        self._note_residency(gid, client, t)
+
+    def _note_residency(self, gid: int, client: int, t: float) -> None:
         prev = self._home.get(client)
         if prev is not None and prev != gid:
             self._last_grant[prev].pop(client, None)

@@ -40,6 +40,7 @@ class SessionBase:
         self._outbox: list[int] = []  # sampled frame indices awaiting upload
         self.admitted = True
         self.state_bytes = 0  # server-side training state (migration cost)
+        self.ams_session = None  # real AMS core, if any (fused-training hook)
         self._edge_rate: float | None = None  # last *delivered* ASR rate
         # telemetry
         self.mious: list[float] = []
@@ -76,6 +77,7 @@ class SegServingSession(SessionBase):
         super().__init__(idx, net)
         self.world = world
         self.session = session
+        self.ams_session = session  # fused-training hook (core.batched)
         self.edge = EdgeClient(world.predict, jax.tree.map(lambda x: x, params0))
         self.fps = world.video.cfg.fps
         self.eval_interval_s = eval_stride / self.fps
@@ -202,3 +204,29 @@ class StubSession(SessionBase):
             return None
         self.phases += 1
         return StubDelta(total_bytes=self._delta_bytes)
+
+
+def train_many(sessions: list, t: float) -> list:
+    """Train several co-granted sessions, fusing where the math allows.
+
+    Sessions exposing a real AMS core (``ams_session``) run through
+    `core.batched.train_phases_fused` as one stacked scan/vmap launch (same
+    grouping rules: shared loss callable, shapes, K, optimizer). Everything
+    else — stubs, single stragglers — falls back to its own ``train``. The
+    returned list is delta-or-None per session, in input order."""
+    out: list = [None] * len(sessions)
+    fusable = [i for i, s in enumerate(sessions)
+               if getattr(s, "ams_session", None) is not None]
+    rest = list(range(len(sessions)))
+    if len(fusable) >= 2:
+        from repro.core.batched import train_phases_fused
+
+        deltas = train_phases_fused([sessions[i].ams_session for i in fusable], t)
+        for i, d in zip(fusable, deltas):
+            if d is not None:
+                sessions[i].phases += 1
+            out[i] = d
+        rest = [i for i in rest if i not in set(fusable)]
+    for i in rest:
+        out[i] = sessions[i].train(t)
+    return out

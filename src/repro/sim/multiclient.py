@@ -79,6 +79,7 @@ def run_multiclient(
     policy: str = "fair",
     n_gpus: int | None = None,
     affinity: bool = False,
+    fuse_train: int | None = None,
     link: LinkSpec | None = None,
     serving_cfg: ServingConfig | None = None,
 ) -> dict:
@@ -90,9 +91,12 @@ def run_multiclient(
     per-GPU utilization/migration and events/sec fields on top.
 
     ``n_gpus`` sizes the server's GPU pool (sessions then compete for
-    (session, gpu) assignments instead of one busy flag) and
-    ``affinity=True`` swaps in the residency-aware `AffinityAware` policy —
-    the defaults keep single-GPU PR-1 results bit-identical.
+    (session, gpu) assignments instead of one busy flag), ``affinity=True``
+    swaps in the residency-aware `AffinityAware` policy, and
+    ``fuse_train=B`` lets a granted device co-train up to B co-resident
+    sessions as one stacked scan/vmap launch (`core.batched`) priced by the
+    sublinear `GPUCostModel.train_batch_s` — the defaults keep single-GPU,
+    unfused PR-1/PR-2 results bit-identical.
 
     The ``duration`` kwarg governs the run: it sizes the videos AND the
     engine horizon. A ``serving_cfg`` supplies the other engine knobs
@@ -112,10 +116,13 @@ def run_multiclient(
                 f"policy; it cannot be combined with policy={policy!r}")
         policy = "affinity"
     if serving_cfg is None:
-        cfg = ServingConfig(duration=duration, n_gpus=n_gpus or 1)
+        cfg = ServingConfig(duration=duration, n_gpus=n_gpus or 1,
+                            fuse_train=fuse_train or 1)
     else:
         cfg = dataclasses.replace(
             serving_cfg, duration=duration,
-            n_gpus=serving_cfg.n_gpus if n_gpus is None else n_gpus)
+            n_gpus=serving_cfg.n_gpus if n_gpus is None else n_gpus,
+            fuse_train=(serving_cfg.fuse_train if fuse_train is None
+                        else fuse_train))
     engine = ServingEngine(sessions, policy=policy, cost=cost, cfg=cfg)
     return engine.run()

@@ -24,6 +24,31 @@ def phi_pixel_loss(label_now: np.ndarray, label_prev: np.ndarray) -> float:
     return float(np.mean(label_now != label_prev))
 
 
+@functools.lru_cache(maxsize=None)
+def _compiled_fns(cfg: SegConfig):
+    """One jitted (loss_and_grad, predict, accuracy) triple per SegConfig.
+
+    Module-level on purpose: N worlds with the same config share the SAME
+    callables, so N sessions cost one compile instead of N — and
+    `core.batched` can group their phases into one fused launch (its compile
+    key includes the loss callable's identity)."""
+
+    @jax.jit
+    def loss_and_grad(params, frames, labels):
+        return jax.value_and_grad(lambda p: seg_loss(cfg, p, frames, labels))(params)
+
+    @jax.jit
+    def predict(params, frames):
+        return seg_predict(cfg, params, frames)
+
+    @jax.jit
+    def accuracy(params, frames, labels):
+        pred = seg_predict(cfg, params, frames)
+        return (pred == labels).mean()
+
+    return loss_and_grad, predict, accuracy
+
+
 @dataclass
 class SegWorld:
     video: SyntheticVideo
@@ -31,24 +56,7 @@ class SegWorld:
     seg_cfg: SegConfig
 
     def __post_init__(self):
-        cfg = self.seg_cfg
-
-        @jax.jit
-        def loss_and_grad(params, frames, labels):
-            return jax.value_and_grad(lambda p: seg_loss(cfg, p, frames, labels))(params)
-
-        @jax.jit
-        def predict(params, frames):
-            return seg_predict(cfg, params, frames)
-
-        @jax.jit
-        def accuracy(params, frames, labels):
-            pred = seg_predict(cfg, params, frames)
-            return (pred == labels).mean()
-
-        self.loss_and_grad = loss_and_grad
-        self.predict = predict
-        self.accuracy = accuracy
+        self.loss_and_grad, self.predict, self.accuracy = _compiled_fns(self.seg_cfg)
 
     @classmethod
     def make(cls, video_cfg: VideoConfig, seg_cfg: SegConfig | None = None,

@@ -43,6 +43,39 @@ def test_delta_bytes_accounting(rng):
     assert d.total_bytes < full_model_bytes(tree)
 
 
+def test_encode_delta_matches_two_pass_reference(rng):
+    """Golden regression for the single-pass/reused-buffer encoder: values,
+    unpacked mask bits, and every byte count must match the original
+    two-pass flatten/concat algorithm exactly (the raw gzip bytes differ
+    only in the pinned MTIME header field, so compare decompressed)."""
+
+    def reference(params_new, mask, value_dtype="float16"):
+        def _flat(t):
+            leaves = [np.asarray(l).reshape(-1) for l in jax.tree.leaves(t)]
+            return np.concatenate(leaves) if leaves else np.zeros((0,))
+
+        flat_p = _flat(params_new)
+        flat_m = _flat(mask).astype(bool)
+        values = flat_p[flat_m].astype(value_dtype)
+        packed = gzip.compress(np.packbits(flat_m).tobytes(), compresslevel=6)
+        return values, packed, flat_p.size
+
+    for sizes in (((16, 8), (33,), (2, 3, 5)), ((1,),), ((257,), (4, 4))):
+        tree = _tree(rng, sizes=sizes)
+        mask = jax.tree.map(
+            lambda x: jnp.asarray(rng.uniform(size=x.shape) < 0.25), tree)
+        d = encode_delta(tree, mask)
+        ref_v, ref_packed, ref_n = reference(tree, mask)
+        np.testing.assert_array_equal(d.values, ref_v)
+        assert d.values.dtype == ref_v.dtype
+        assert gzip.decompress(d.packed_mask) == gzip.decompress(ref_packed)
+        assert d.mask_bytes == len(ref_packed)
+        assert d.n_total == ref_n
+        assert d.total_bytes == ref_v.nbytes + len(ref_packed)
+        # the new encoding is additionally a pure function of its inputs
+        assert encode_delta(tree, mask).packed_mask == d.packed_mask
+
+
 @settings(max_examples=25, deadline=None)
 @given(seed=st.integers(0, 10_000), frac=st.floats(0, 1))
 def test_property_delta_roundtrip(seed, frac):

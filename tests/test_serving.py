@@ -555,6 +555,180 @@ def test_delta_compression_charges_the_device_clock():
     assert comp["events_processed"] > free["events_processed"]  # gpu_free evs
 
 
+# ---------------- fused cross-session training ----------------
+
+
+def test_train_batch_s_solo_exact_and_sublinear():
+    c = GPUCostModel()
+    assert c.train_batch_s(0, 20) == 0.0
+    # B=1 is EXACTLY the sequential phase cost (unfused engines bit-identical)
+    assert c.train_batch_s(1, 20) == 20 * c.train_iter_s
+    for b in range(2, 9):
+        fused = c.train_batch_s(b, 20)
+        assert fused < b * c.train_batch_s(1, 20)  # sublinear in B
+        assert fused > c.train_batch_s(b - 1, 20)  # but monotone
+    # setup amortizes: per-session cost falls as the stack grows
+    per = [c.train_batch_s(b, 20) / b for b in (2, 4, 8)]
+    assert per[0] > per[1] > per[2]
+
+
+def _coalesce_pool():
+    pool = GPUPool(2, migration=MigrationModel(gbps=1.0, setup_s=0.5))
+    for c in (0, 1, 2):  # residents of device 0
+        pool.grant(0, client=c, t=0.0, dur_s=0.1, horizon_s=100.0)
+        pool.release(0)
+    pool.grant(1, client=3, t=0.0, dur_s=0.1, horizon_s=100.0)  # device 1
+    pool.release(1)
+    return pool
+
+
+def test_coalesce_takes_coresident_same_k_only():
+    from repro.serving import Assignment
+
+    pool = _coalesce_pool()
+    p = make_policy("fair")
+    granted = Assignment(req=_req(0), gpu=0)
+    ready = [_req(1, t_request=2.0), _req(2, t_request=1.0), _req(3)]
+    for r in ready:
+        r.state_bytes = 10 ** 9
+    # client 3 is resident on device 1 -> staging it on 0 costs migration
+    riders = p.coalesce(10.0, granted, ready, pool, max_fuse=4)
+    assert [r.client for r in riders] == [2, 1]  # oldest first, 3 excluded
+    # max_fuse caps the stack (primary + riders)
+    assert [r.client for r in p.coalesce(10.0, granted, ready, pool, 2)] == [2]
+    # a different iteration count cannot share the executable
+    odd = _req(2, t_request=1.0)
+    odd.k_iters = 7
+    assert p.coalesce(10.0, granted, [odd], pool, 4) == []
+    # fusing disabled
+    assert p.coalesce(10.0, granted, ready, pool, 1) == []
+
+
+def test_coalesce_bounded_by_residency_cap():
+    """A device whose HBM holds only N session states cannot co-train a
+    larger stack — an oversized stack would LRU-evict its own members
+    mid-launch (spilling the actively-training primary to host)."""
+    from repro.serving import Assignment
+
+    pool = GPUPool(1, residency_cap=2)
+    for c in (0, 1, 2):
+        pool.grant(0, client=c, t=float(c), dur_s=0.1, horizon_s=100.0)
+        pool.release(0)
+    granted = Assignment(req=_req(2), gpu=0)
+    ready = [_req(1, t_request=1.0), _req(0, t_request=2.0)]
+    for policy in ("fair", "gain"):
+        riders = make_policy(policy).coalesce(10.0, granted, ready, pool, 4)
+        assert len(riders) <= 1  # stack of 2 fits cap=2; 3 would self-evict
+    # cap=1: no rider can ever join
+    tight = GPUPool(1, residency_cap=1)
+    assert make_policy("fair").coalesce(10.0, granted, ready, tight, 4) == []
+    # engine end-to-end: every fused stack obeys the cap
+    eng = ServingEngine(_stub_fleet(6), policy="fair",
+                        cfg=ServingConfig(duration=90.0, fuse_train=4,
+                                          residency_cap=2))
+    eng._init_events()
+    while eng.q:
+        ev = eng.q.pop()
+        if ev.kind == "gpu_done":
+            assert 1 + len(ev.payload[1]) <= 2  # stack never exceeds cap
+        eng._dispatch(ev)
+
+
+def test_coalesce_gain_ranks_riders_by_score():
+    from repro.serving import Assignment
+
+    pool = _coalesce_pool()
+    p = make_policy("gain")
+    granted = Assignment(req=_req(0), gpu=0)
+    ready = [_req(1, phi=0.1), _req(2, phi=2.0)]
+    riders = p.coalesce(10.0, granted, ready, pool, max_fuse=2)
+    assert [r.client for r in riders] == [2]  # highest gain, not oldest
+
+
+def test_pool_attach_rehomes_rider_without_busy():
+    pool = GPUPool(2)
+    pool.grant(0, client=0, t=0.0, dur_s=5.0, horizon_s=50.0)
+    pool.attach(0, client=4, t=0.0)
+    assert pool.home_of(4) == 0 and pool.rider_grants == 1
+    assert pool.device(0).busy and not pool.device(1).busy
+    assert pool.device(0).grants == 1  # riders are not device grants
+
+
+def test_engine_fuse_train_coalesces_and_serves_more():
+    """A saturated single GPU with fusing on: fused launches happen, riders
+    are real, and the sublinear batched cost buys strictly more served
+    phases than the sequential engine on the same fleet."""
+    def run(fuse):
+        return ServingEngine(
+            _stub_fleet(8), policy="fair",
+            cfg=ServingConfig(duration=120.0, max_queue=32,
+                              fuse_train=fuse)).run()
+
+    seq, fused = run(1), run(4)
+    assert seq["fused_launches"] == 0 and seq["rider_grants"] == 0
+    assert fused["fused_launches"] > 0
+    assert fused["fused_sessions"] >= 2 * fused["fused_launches"]
+    assert fused["rider_grants"] == (fused["fused_sessions"]
+                                     - fused["fused_launches"])
+    assert fused["phases_served"] > seq["phases_served"]
+    assert fused["mean_miou"] >= seq["mean_miou"]
+
+
+def test_engine_fused_respects_singular_session_state():
+    """Fusing must not break the invariant that a session trains on at most
+    one device at a time (riders count as mid-phase too)."""
+    fleet = _stub_fleet(4)
+    eng = ServingEngine(fleet, policy="fair",
+                        cfg=ServingConfig(duration=90.0, n_gpus=2,
+                                          fuse_train=3))
+    eng._init_events()
+    running: dict[int, float] = {}
+    while eng.q:
+        ev = eng.q.pop()
+        if ev.kind == "gpu_done":
+            for c in (ev.client, *ev.payload[1]):
+                running.pop(c, None)
+        before = set(eng._active)
+        eng._dispatch(ev)
+        for c in eng._active - before:
+            assert c not in running, f"client {c} double-granted at {ev.time}"
+            running[c] = ev.time
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(2, 10), n_gpus=st.integers(1, 3),
+       fuse=st.integers(1, 5),
+       policy=st.sampled_from(["fair", "edf", "gain", "affinity"]))
+def test_engine_fused_pool_invariants(n, n_gpus, fuse, policy):
+    """Any fleet/pool/fuse depth: no double-booking (grant raises), busy
+    clocks bounded by the horizon, and every session's phases add up."""
+    eng = ServingEngine(_stub_fleet(n), policy=policy,
+                        cfg=ServingConfig(duration=90.0, n_gpus=n_gpus,
+                                          fuse_train=fuse))
+    r = eng.run()
+    assert all(d.busy_s <= 90.0 + 1e-9 for d in eng.pool.devices)
+    assert sum(r["phases_per_client"]) == r["phases_served"]
+    assert r["fused_sessions"] - r["fused_launches"] == r["rider_grants"]
+
+
+def test_run_multiclient_fuse_train_kwarg():
+    import jax as _jax
+
+    from repro.core.server import AMSConfig
+    from repro.models.seg.student import SegConfig, make_student
+    from repro.sim.multiclient import run_multiclient
+
+    seg = SegConfig(n_classes=5)
+    pre = make_student(seg, _jax.random.PRNGKey(0))
+    ams = AMSConfig(t_update=8.0, t_horizon=30.0, k_iters=2, batch_size=2,
+                    gamma=0.05, lr=2e-3, phi_target=0.15)
+    r = run_multiclient(4, pre, seg, ams, duration=25.0,
+                        video_kw=dict(height=24, width=24, fps=2.0),
+                        fuse_train=3)
+    assert r["fused_launches"] > 0  # real seg sessions fused end-to-end
+    assert np.isfinite(r["mean_miou"])
+
+
 # ---------------- edge client double-buffering ----------------
 
 

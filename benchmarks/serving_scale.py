@@ -11,18 +11,23 @@ so the numbers are pure engine/scheduler behaviour. Two questions:
      it shares a score with (migration time avoided -> phases + freshness)?
 
 Emits ``BENCH_serving.json`` (sessions sustained, sessions-per-GPU, the
-affinity comparison, the fused-training section) next to the repo root so
-future PRs can track the trajectory. ``--smoke`` is the CI entry point:
-``--smoke`` alone is the PR-1 single-GPU engine smoke; ``--smoke --gpus 4``
-additionally asserts >=3x sustained-session scaling from 1 -> 4 GPUs under
-the fair policy and that affinity beats blind assignment; ``--smoke
---fused`` asserts that coalesced stacked train launches (fuse_train, priced
-by the sublinear `GPUCostModel.train_batch_s`) sustain MORE sessions on one
-GPU than the sequential engine, and that the real-math fused wall-clock for
-8 seg sessions x one phase is <= 0.6x sequential.
+affinity comparison, the fused-training and dual-stream sections) next to
+the repo root so future PRs can track the trajectory. ``--smoke`` is the CI
+entry point: ``--smoke`` alone is the PR-1 single-GPU engine smoke;
+``--smoke --gpus 4`` additionally asserts >=3x sustained-session scaling
+from 1 -> 4 GPUs under the fair policy and that affinity beats blind
+assignment; ``--smoke --fused`` asserts that coalesced stacked train
+launches (fuse_train, priced by the sublinear `GPUCostModel.train_batch_s`)
+sustain MORE sessions on one GPU than the sequential engine, and that the
+real-math fused wall-clock for 8 seg sessions x one phase is <= 0.6x
+sequential; ``--smoke --overlap`` asserts the dual-stream device model
+(label/train stream overlap + preemptible labeling, `serving.StreamModel`)
+sustains STRICTLY more sessions on one fused GPU than the serialized
+single-clock baseline at the same mIoU target, and records preemption +
+per-stream utilization telemetry.
 
 Run: PYTHONPATH=src python -m benchmarks.serving_scale [--smoke]
-     [--gpus 4] [--fused]
+     [--gpus 4] [--fused] [--overlap]
 """
 from __future__ import annotations
 
@@ -37,6 +42,7 @@ from repro.serving import (
     LinkSpec,
     ServingConfig,
     ServingEngine,
+    StreamModel,
     StubSession,
 )
 
@@ -63,11 +69,12 @@ def make_stub_fleet(n: int, *, stationary_frac: float = 0.3,
 
 def run_fleet(n: int, *, n_gpus: int = 1, policy: str = "fair",
               duration: float = 240.0, max_queue: int = 32,
-              fuse_train: int = 1) -> dict:
+              fuse_train: int = 1, streams: StreamModel | None = None) -> dict:
     engine = ServingEngine(
         make_stub_fleet(n), policy=policy, cost=GPUCostModel(),
         cfg=ServingConfig(duration=duration, max_queue=max_queue,
-                          n_gpus=n_gpus, fuse_train=fuse_train))
+                          n_gpus=n_gpus, fuse_train=fuse_train,
+                          streams=streams or StreamModel()))
     return engine.run()
 
 
@@ -75,13 +82,14 @@ def sessions_sustained(n_gpus: int, *, policy: str = "fair",
                        counts=(4, 8, 12, 16, 20, 24, 28, 32),
                        duration: float = 240.0,
                        target: float = TARGET_MIOU,
-                       fuse_train: int = 1) -> tuple[int, dict]:
+                       fuse_train: int = 1,
+                       streams: StreamModel | None = None) -> tuple[int, dict]:
     """Largest fleet in ``counts`` whose mean mIoU holds ``target`` on an
     ``n_gpus`` pool (0 if even the smallest fleet degrades past it)."""
     best, per_count = 0, {}
     for n in counts:
         r = run_fleet(n, n_gpus=n_gpus, policy=policy, duration=duration,
-                      fuse_train=fuse_train)
+                      fuse_train=fuse_train, streams=streams)
         per_count[n] = r
         if r["mean_miou"] >= target:
             best = max(best, n)
@@ -222,6 +230,54 @@ def run_fused_sweep(fuse: int = 4, *, counts=(8, 10, 12, 14, 16, 20),
     return bench["fused_training"]
 
 
+def run_overlap_sweep(fuse: int = 4, *, counts=(10, 12, 14, 16, 18, 20),
+                      duration: float = 240.0, slowdown: float = 1.1,
+                      preempt_cost: float = 0.02) -> dict:
+    """Dual-stream device model on ONE fused GPU: sessions sustained at the
+    target mIoU when teacher labeling overlaps training (label vs train
+    streams, bounded ``slowdown`` while both are busy) with labeling
+    launches preemptible at frame-batch boundaries — vs the serialized
+    single-clock baseline (the PR-3 behavior) on the same fleet. Updates
+    the ``dual_stream`` section of BENCH_serving.json with the capacity
+    pair plus preemption and per-stream utilization telemetry at the
+    overlapped peak."""
+    streams = StreamModel(mode="overlap", slowdown=slowdown, preempt=True,
+                          preempt_cost_s=preempt_cost)
+    with Timer() as t:
+        ser_best, _ = sessions_sustained(1, counts=counts, duration=duration,
+                                         fuse_train=fuse)
+        ovl_best, per_count = sessions_sustained(
+            1, counts=counts, duration=duration, fuse_train=fuse,
+            streams=streams)
+    peak = per_count[max(ovl_best, counts[0])]
+    su = peak["per_gpu_stream_utilization"]
+    emit(f"serving_scale.overlap.g1.f{fuse}", t.us,
+         f"sustained_serialized={ser_best};sustained_overlap={ovl_best};"
+         f"target_miou={TARGET_MIOU};slowdown={slowdown};"
+         f"preemptions_at_peak={peak['preemptions']};"
+         f"label_util={su['label'][0]:.2f};train_util={su['train'][0]:.2f};"
+         f"overlap_s={peak['overlap_s']:.0f}")
+    bench = {
+        "dual_stream": {
+            "fuse_train": fuse,
+            "duration_s": duration,
+            "target_miou": TARGET_MIOU,
+            "stream_model": {"mode": "overlap", "slowdown": slowdown,
+                             "preempt": True,
+                             "preempt_cost_s": preempt_cost},
+            "sessions_sustained_1gpu": {"serialized": ser_best,
+                                        "overlap": ovl_best},
+            "preemptions_at_peak": peak["preemptions"],
+            "preempted_frames_at_peak": peak["preempted_frames"],
+            "overlap_s_at_peak": peak["overlap_s"],
+            "stream_utilization_at_peak": {
+                "label": su["label"][0], "train": su["train"][0]},
+        }
+    }
+    _write_bench(bench)
+    return bench["dual_stream"]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -234,8 +290,28 @@ def main() -> None:
                     help="fused cross-session training sweep: sessions "
                          "sustained on 1 GPU with coalesced stacked "
                          "launches + real-math wall-clock compare")
+    ap.add_argument("--overlap", action="store_true",
+                    help="dual-stream sweep: sessions sustained on 1 fused "
+                         "GPU with label/train stream overlap + preemptible "
+                         "labeling vs the serialized single-clock baseline")
     ap.add_argument("--duration", type=float, default=None)
     args = ap.parse_args()
+    if args.smoke and args.overlap:
+        ob = run_overlap_sweep()
+        ser = ob["sessions_sustained_1gpu"]["serialized"]
+        ovl = ob["sessions_sustained_1gpu"]["overlap"]
+        assert ser > 0, "serialized fused 1-GPU engine sustains nothing"
+        assert ovl > ser, (
+            f"dual-stream overlap should sustain strictly more sessions on "
+            f"one GPU than the serialized clock (got {ovl} vs {ser})")
+        su = ob["stream_utilization_at_peak"]
+        assert su["label"] > 0.0 and su["train"] > 0.0
+        assert ob["overlap_s_at_peak"] > 0.0
+        print(f"serving_scale overlap smoke OK (sustained {ser} -> {ovl} "
+              f"sessions on 1 GPU, {ob['preemptions_at_peak']} preemptions "
+              f"at peak)")
+        print("serving_scale smoke OK")
+        return
     if args.smoke and args.fused:
         fb = run_fused_sweep()
         seq = fb["sessions_sustained_1gpu"]["sequential"]
@@ -280,6 +356,8 @@ def main() -> None:
             run_pool_sweep(args.gpus, duration=args.duration or 240.0)
         if args.fused:
             run_fused_sweep(duration=args.duration or 240.0)
+        if args.overlap:
+            run_overlap_sweep(duration=args.duration or 240.0)
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ import argparse
 
 from repro.core.server import AMSConfig
 from repro.models.seg.student import SegConfig
-from repro.serving import LinkSpec
+from repro.serving import LinkSpec, StreamModel
 from repro.sim.multiclient import run_multiclient
 from repro.sim.seg_world import pretrain_student
 
@@ -26,6 +26,15 @@ def main():
                     help="residency-aware (session, gpu) placement")
     ap.add_argument("--fuse-train", type=int, default=1,
                     help="max co-resident sessions per fused train launch")
+    ap.add_argument("--overlap", action="store_true",
+                    help="dual-stream devices: teacher labeling overlaps "
+                         "training instead of serializing on one clock")
+    ap.add_argument("--slowdown", type=float, default=1.1,
+                    help="stream contention stretch while both streams are "
+                         "busy (with --overlap; 1.0 = full overlap)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="labeling launches preemptible at frame-batch "
+                         "boundaries (works with or without --overlap)")
     ap.add_argument("--up-kbps", type=float, default=1000.0)
     ap.add_argument("--down-kbps", type=float, default=2000.0)
     args = ap.parse_args()
@@ -35,10 +44,17 @@ def main():
                            video_kw=dict(height=48, width=48, fps=4.0, duration=60.0))
     ams = AMSConfig(t_update=10.0, t_horizon=60.0, k_iters=12, batch_size=6,
                     gamma=0.05, lr=2e-3, phi_target=0.15, asr_eta=1.0, atr_enabled=args.atr)
+    streams = None
+    if args.overlap or args.preempt:
+        streams = StreamModel(
+            mode="overlap" if args.overlap else "serialized",
+            slowdown=args.slowdown if args.overlap else 1.0,
+            preempt=args.preempt, preempt_cost_s=0.02)
     out = run_multiclient(args.clients, pre, seg_cfg, ams, duration=args.duration,
                           video_kw=dict(height=48, width=48, fps=4.0),
                           policy=args.policy, n_gpus=args.gpus,
                           affinity=args.affinity, fuse_train=args.fuse_train,
+                          streams=streams,
                           link=LinkSpec(up_kbps=args.up_kbps, down_kbps=args.down_kbps))
     print(f"clients={out['n_clients']} policy={out['scheduler']} "
           f"gpus={out['n_gpus']} "
@@ -57,6 +73,13 @@ def main():
         print(f"fused training: {out['fused_launches']} stacked launches "
               f"covering {out['fused_sessions']} sessions "
               f"({out['rider_grants']} riders)")
+    if out["stream_mode"] != "serialized" or out["preemptions"]:
+        su = out["per_gpu_stream_utilization"]
+        print(f"streams [{out['stream_mode']}]: label util "
+              f"{su['label'][0]:.2f} train util {su['train'][0]:.2f}; "
+              f"overlap {out['overlap_s']:.1f} s; "
+              f"{out['preemptions']} preemptions "
+              f"({out['preempted_frames']} frames requeued)")
     for i, (m, (up, down), ph, dev) in enumerate(zip(out["miou_per_client"],
                                                      out["per_client_kbps"],
                                                      out["phases_per_client"],

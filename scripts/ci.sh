@@ -36,6 +36,15 @@ echo "== fused-training smoke: benchmarks.serving_scale --smoke --fused =="
 python -m benchmarks.serving_scale --smoke --fused
 fused_smoke=$?
 
-echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke"
-[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && echo "CI OK"
-exit $((tier1 | smoke | pool_smoke | fused_smoke))
+echo "== dual-stream smoke: benchmarks.serving_scale --smoke --overlap =="
+# asserts the dual-stream device model (label/train stream overlap with
+# preemptible labeling launches) sustains STRICTLY more sessions on one
+# fused GPU than the serialized single-clock baseline at the same mIoU
+# target; records preemption + per-stream utilization telemetry in the
+# dual_stream section of BENCH_serving.json
+python -m benchmarks.serving_scale --smoke --overlap
+overlap_smoke=$?
+
+echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke, overlap smoke exit=$overlap_smoke"
+[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && [ "$overlap_smoke" -eq 0 ] && echo "CI OK"
+exit $((tier1 | smoke | pool_smoke | fused_smoke | overlap_smoke))

@@ -18,16 +18,23 @@ bitwise-identical to ``train_phase`` by construction — so fusing is a pure
 opt-in: with coalescing disabled every phase is a singleton and nothing
 changes, to the bit.
 
-Execution mode: on accelerator backends the K iterations live inside the
-executable as a ``lax.scan`` (one launch per phase). XLA:CPU, however, runs
-while-loop bodies on a single thread — measured ~4x slower than the same
-math dispatched step-by-step — so on CPU the cached executable is the
-vmapped *step* and the K-loop stays in Python: still one compile and one
-launch per iteration for the whole stack, instead of B. ``set_exec_mode``
-overrides the auto-detection (benchmarks/tests).
+Execution mode: the K iterations either live inside the executable as a
+``lax.scan`` (one launch per phase — the accelerator-friendly shape) or the
+cached executable is the vmapped *step* with the K-loop in Python (XLA:CPU
+runs while-loop bodies on a single thread, measured ~4x slower than the
+same math dispatched step-by-step). ``mode="auto"`` (the default) settles
+scan-vs-loop **empirically**: the first fused call for a compile key builds
+both executables, times one real execution of each on the caller's own
+stacked batch, keeps the winner, and caches the decision — a one-shot
+microbenchmark per (backend, compile key) instead of a backend-name check,
+so an accelerator whose scan lowering happens to be slow (or a CPU build
+whose loop dispatch is) is measured, not assumed. ``set_exec_mode`` forces
+either shape (benchmarks/tests); ``auto_mode_info`` exposes the measured
+decisions.
 """
 from __future__ import annotations
 
+import time
 from collections import defaultdict
 from typing import Hashable
 
@@ -71,24 +78,28 @@ _HITS = 0
 _MISSES = 0
 
 _EXEC_MODE = "auto"  # "auto" | "scan" | "loop"
+# measured scan-vs-loop winners: (backend, base compile key) -> mode.
+# "auto" consults this instead of the backend name; each entry is settled
+# by a one-shot timed race of both executables on the first real call.
+_AUTO_MODES: dict = {}
 
 
 def set_exec_mode(mode: str) -> None:
     """Force the phase-executable shape: ``scan`` (K iterations inside one
-    ``lax.scan`` launch — accelerator default), ``loop`` (one vmapped-step
-    launch per iteration — CPU default, where XLA runs loop bodies
-    single-threaded), or ``auto``. Cached executables for the other mode are
-    kept; the key includes the resolved mode."""
+    ``lax.scan`` launch), ``loop`` (one vmapped-step launch per iteration),
+    or ``auto`` (first fused call per compile key races both and keeps the
+    measured winner). Cached executables for the other mode are kept; the
+    key includes the resolved mode."""
     if mode not in ("auto", "scan", "loop"):
         raise ValueError(f"exec mode must be auto|scan|loop, got {mode!r}")
     global _EXEC_MODE
     _EXEC_MODE = mode
 
 
-def _resolved_mode() -> str:
-    if _EXEC_MODE != "auto":
-        return _EXEC_MODE
-    return "loop" if jax.default_backend() == "cpu" else "scan"
+def auto_mode_info() -> dict:
+    """The measured auto decisions: {(backend, compile key): "scan"|"loop"}.
+    Empty until an ``auto``-mode fused call has raced the two shapes."""
+    return dict(_AUTO_MODES)
 
 
 def cache_info() -> dict:
@@ -99,6 +110,7 @@ def cache_info() -> dict:
 def cache_clear() -> None:
     global _HITS, _MISSES
     _PHASE_CACHE.clear()
+    _AUTO_MODES.clear()
     _HITS = _MISSES = 0
 
 
@@ -154,6 +166,11 @@ def _build_phase_fn(loss_and_grad, optimizer: str, lr: float, b1: float,
     return phase
 
 
+def _block(tree) -> None:
+    for leaf in jax.tree.leaves(tree):
+        getattr(leaf, "block_until_ready", lambda: None)()
+
+
 def fused_phase_fn(loss_and_grad, *, struct: Hashable, k_iters: int,
                    optimizer: str, lr: float, b1: float, b2: float,
                    eps: float, momentum: float):
@@ -163,20 +180,60 @@ def fused_phase_fn(loss_and_grad, *, struct: Hashable, k_iters: int,
     share it — see `sim.seg_world`'s per-config compile cache), the stacked
     shape-dtype struct, K, and the optimizer recipe: N same-shaped sessions
     cost one compile, not N.
-    """
+
+    In ``auto`` mode the first call for an undecided key returns a one-shot
+    *racer*: invoked on the first real stacked batch it builds both the
+    scan- and loop-shaped executables, times one warmed execution of each,
+    records the winner in `_AUTO_MODES` (see `auto_mode_info`), caches the
+    winning executable, and returns its output — so every later call is a
+    plain cache hit on measured evidence rather than a backend-name guess.
+    The loser is discarded uncounted; the race is one cache miss."""
     global _HITS, _MISSES
-    mode = _resolved_mode()
-    key = (loss_and_grad, struct, k_iters, optimizer, lr, b1, b2, eps,
-           momentum, mode)
-    fn = _PHASE_CACHE.get(key)
-    if fn is None:
-        _MISSES += 1
-        fn = _build_phase_fn(loss_and_grad, optimizer, lr, b1, b2, eps,
-                             momentum, mode)
-        _PHASE_CACHE[key] = fn
+    base_key = (loss_and_grad, struct, k_iters, optimizer, lr, b1, b2, eps,
+                momentum)
+    if _EXEC_MODE != "auto":
+        mode = _EXEC_MODE
     else:
-        _HITS += 1
-    return fn
+        mode = _AUTO_MODES.get((jax.default_backend(), base_key))
+    if mode is not None:
+        key = base_key + (mode,)
+        fn = _PHASE_CACHE.get(key)
+        if fn is None:
+            _MISSES += 1
+            fn = _build_phase_fn(loss_and_grad, optimizer, lr, b1, b2, eps,
+                                 momentum, mode)
+            _PHASE_CACHE[key] = fn
+        else:
+            _HITS += 1
+        return fn
+    _MISSES += 1
+
+    def race(params, opt_state, mask, frames, labels):
+        auto_key = (jax.default_backend(), base_key)
+        args = (params, opt_state, mask, frames, labels)
+        outs, times = {}, {}
+        for m in ("loop", "scan"):
+            fn = _build_phase_fn(loss_and_grad, optimizer, lr, b1, b2, eps,
+                                 momentum, m)
+            _block(fn(*args))  # compile + warm, excluded from the clock
+            best = float("inf")
+            for _ in range(2):  # best-of-2: damp scheduler/GC jitter
+                t0 = time.perf_counter()
+                out = fn(*args)
+                _block(out)
+                best = min(best, time.perf_counter() - t0)
+            times[m] = best
+            outs[m] = (fn, out)
+        # ties break lexically ("loop"); note the race is wall-clock — a
+        # near-tie can resolve differently across processes, and the two
+        # shapes agree only to float32 tolerance (forced modes, or a
+        # pre-warmed cache, give bit-stable numerics when that matters)
+        winner = min(times, key=lambda m: (times[m], m))
+        _AUTO_MODES[auto_key] = winner
+        _PHASE_CACHE[base_key + (winner,)] = outs[winner][0]
+        return outs[winner][1]
+
+    return race
 
 
 # ---------------------------------------------------------------------------

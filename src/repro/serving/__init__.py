@@ -12,9 +12,15 @@ Paper-concept -> class map (Appendix D/E):
                                               φ-score + staleness priority,
                                               φ-aware eviction when saturated)
   App. E scaling argument, many GPUs          `resources.GPUPool` (per-device
-                                              busy clocks + session residency)
-                                              + `policies.AffinityAware`
-                                              (session, gpu) placement
+                                              stream clocks + session
+                                              residency) + `policies.
+                                              AffinityAware` (session, gpu)
+                                              placement
+  Server labels + trains concurrently (§4)    `resources.StreamModel`: label
+                                              vs train streams per device,
+                                              overlap with bounded slowdown,
+                                              labeling preemptible at frame-
+                                              batch boundaries
   Uplink frame batches / downlink deltas      `network.ClientNetwork` (links
   (§3.1.2, §3.2, Tables 1-2)                  occupy `bytes/rate` s, feed the
                                               per-client `BandwidthLedger`)
@@ -57,7 +63,12 @@ from repro.serving.policies import (
     SchedulingPolicy,
     make_policy,
 )
-from repro.serving.resources import GPUDevice, GPUPool, MigrationModel
+from repro.serving.resources import (
+    GPUDevice,
+    GPUPool,
+    MigrationModel,
+    StreamModel,
+)
 from repro.serving.session import (
     SegServingSession,
     SessionBase,
@@ -69,7 +80,7 @@ __all__ = [
     "Event", "EventQueue", "ClientNetwork", "Link", "LinkSpec",
     "SchedulingPolicy", "FairRoundRobin", "EarliestDeadlineFirst",
     "GainAware", "AffinityAware", "Assignment", "GPURequest", "POLICIES",
-    "make_policy", "GPUDevice", "GPUPool", "MigrationModel",
+    "make_policy", "GPUDevice", "GPUPool", "MigrationModel", "StreamModel",
     "SegServingSession", "SessionBase", "StubSession", "train_many",
     "ServingConfig", "ServingEngine",
 ]

@@ -17,10 +17,13 @@ lifecycle of one update period, in events:
                        on that device's clock), labels the queued backlog in
                        one batched teacher launch, then runs the session's
                        K-iteration training phase. With ``fuse_train > 1``
-                       the grant also takes up to fuse_train-1 ready *riders*
-                       already resident on that device: the whole stack
+                       the grant also takes ready *riders* whose staging is
+                       cheaper than the fused-stack discount: the whole stack
                        trains as ONE fused scan/vmap launch (`core.batched`)
                        priced sublinearly by `GPUCostModel.train_batch_s`
+    label_seg (gpu g)  [dual-stream path] one frame batch of a labeling
+                       launch completes on g's label stream; the labels land
+                       in the owning session's replay buffer
     gpu_done  (gpu g)  the phase ends on device g; the fresh ModelDelta is
                        compressed on g's clock (delta_comp_s, optional) and
                        ships over the client's downlink, followed by the ASR
@@ -30,6 +33,19 @@ lifecycle of one update period, in events:
                        double-buffered EdgeClient
     rate_ctrl (edge)   the ASR's new sampling rate takes effect on-device
     eval      (edge)   mIoU of the client-side weights against the teacher
+
+Device time is charged through `resources.StreamModel`: every work item —
+teacher labeling, solo/fused training, migration, delta compression — lands
+on a named per-device stream (``label`` or ``train``). The default model
+(serialized streams, no preemption) is the PR-3 single busy clock and takes
+a legacy fast path that reproduces it bit-for-bit. With ``overlap`` the two
+streams run concurrently (bounded ``slowdown`` while both are busy), so a
+cross-client labeling batch no longer serializes against the fused train
+launch it feeds; with ``preempt`` an in-flight labeling launch is split at a
+frame-batch boundary when a train grant needs its labels (or, serialized,
+the clock) sooner — the remainder requeues behind the grant at a modeled
+preemption cost, so train-phase latency no longer inherits the tail of
+whoever's labeling.
 
 Defaults reproduce PR 1 bit-for-bit: ``n_gpus=1`` means one device, nothing
 to migrate to, no `gpu_free`/`rate_ctrl` events (compression and the rate
@@ -48,7 +64,7 @@ import numpy as np
 from repro.core.scheduler import GPUCostModel
 from repro.serving.events import EventQueue
 from repro.serving.policies import GPURequest, SchedulingPolicy, make_policy
-from repro.serving.resources import GPUPool, MigrationModel
+from repro.serving.resources import GPUPool, MigrationModel, StreamModel
 from repro.serving.session import train_many
 
 
@@ -73,10 +89,44 @@ class ServingConfig:
     asr_ctrl_bytes: int = 0  # rate-control message on the downlink
     # ---- fused cross-session training (core.batched) ---------------------
     # max sessions per stacked train launch: a granted device also takes up
-    # to fuse_train-1 ready "riders" that cost nothing to stage there, and
-    # runs the whole stack as one scan/vmap executable priced by
-    # `GPUCostModel.train_batch_s`. 1 == coalescing off, PR-2 bit-identical.
+    # to fuse_train-1 ready "riders" whose staging cost is beaten by the
+    # fused-stack discount, and runs the whole stack as one scan/vmap
+    # executable priced by `GPUCostModel.train_batch_s`. 1 == coalescing
+    # off, PR-2 bit-identical.
     fuse_train: int = 1
+    # ---- dual-stream device model (resources.StreamModel) ----------------
+    # label vs train stream interaction per device. The default (serialized,
+    # no preemption) is the PR-3 single busy clock, bit-for-bit.
+    streams: StreamModel = field(default_factory=StreamModel)
+
+
+@dataclass
+class _Segment:
+    """One frame batch on a device's label stream — the preemption quantum.
+
+    Created when a backlog's unlabeled frames are put on a stream (either
+    as a grant's own labeling or as cross-client prefetch). Carries its
+    scheduled completion ``bound``; requeued segments get a fresh bound in
+    their new launch."""
+
+    client: int
+    idxs: list
+    bound: float = 0.0  # absolute completion time in its current launch
+    done: bool = False
+
+
+@dataclass
+class _LabelLaunch:
+    """One batched labeling launch charged on a device's label stream."""
+
+    gid: int
+    start: float
+    end: float
+    segs: list
+    cut: float | None = None  # preemption boundary: segments past it requeued
+
+    def live_at(self, t: float) -> bool:
+        return self.cut is None and self.end > t
 
 
 @dataclass
@@ -84,7 +134,8 @@ class _Backlog:
     """Server-side state for one queued request."""
 
     req: GPURequest
-    idxs: list  # frame indices not yet teacher-labeled
+    idxs: list  # frame indices not yet put on a label stream
+    segment: _Segment | None = None  # labeling segment, once scheduled
 
 
 class ServingEngine:
@@ -99,14 +150,18 @@ class ServingEngine:
         self.pool = pool or GPUPool(
             n_gpus=self.cfg.n_gpus, cost=self.cost,
             migration=self.cfg.migration,
-            residency_cap=self.cfg.residency_cap)
+            residency_cap=self.cfg.residency_cap,
+            streams=self.cfg.streams)
         self.q = EventQueue()
         self._queue: list[_Backlog] = []
         self._active: set[int] = set()  # clients mid-phase on some device
+        self._label_sched: dict[int, list[_LabelLaunch]] = {
+            d.gid: [] for d in self.pool.devices}
         self._handlers = {
             "sample": self._on_sample, "eval": self._on_eval,
             "upload": self._on_upload, "request": self._on_request,
             "gpu_done": self._on_gpu_done, "gpu_free": self._on_gpu_free,
+            "label_seg": self._on_label_seg,
             "delta": self._on_delta, "rate_ctrl": self._on_rate_ctrl}
         # telemetry
         self.served = 0
@@ -147,7 +202,10 @@ class ServingEngine:
                 train_s = self.cost.train_batch_s(fuse, s.k_iters) / fuse
             else:
                 train_s = s.k_iters * self.cost.train_iter_s
-            rho.append((label_s + train_s) / max(s.t_update, 1e-9))
+            # overlap-aware projection: concurrent streams demand less than
+            # the serialized sum (serialized: exactly label_s + train_s)
+            demand = self.cfg.streams.stream_demand_s(label_s, train_s)
+            rho.append(demand / max(s.t_update, 1e-9))
         if budget is None:  # index order: keeps the load sum bit-identical
             order = range(len(self.sessions))
         else:
@@ -246,7 +304,8 @@ class ServingEngine:
             riders = []
             if self.cfg.fuse_train > 1:
                 # fill the stacked launch: ready requests not claimed this
-                # round that are free to train on the granted device
+                # round that are free (or cheap enough — see the cost-aware
+                # `coalesce`) to train on the granted device
                 leftover = [r for r in ready.values()
                             if not any(r is x for x in taken)]
                 riders = self.policy.coalesce(t, a, leftover, self.pool,
@@ -269,8 +328,15 @@ class ServingEngine:
         for b in self._queue:
             b.req.phi = _phi_of(self.sessions[b.req.client])
 
+    def _rider_migration_s(self, gid: int, riders: list[_Backlog]) -> list[float]:
+        return [self.pool.migration_s(b.req.client, gid, b.req.state_bytes)
+                for b in riders]
+
     def _start_service(self, t: float, backlog: _Backlog, gid: int,
                        riders: list[_Backlog] | None = None) -> None:
+        if not self.cfg.streams.legacy:
+            self._start_service_streams(t, backlog, gid, riders or [])
+            return
         dev = self.pool.device(gid)
         riders = riders or []
         # cross-client batched labeling: one launch on the granted device
@@ -286,29 +352,201 @@ class ServingEngine:
             self.label_batches += 1
             self.labels_total += n_label
         # staging a non-resident session's state runs on this device's clock
-        # *before* the labeling launch, so labels land at t + mig_s + label_s
-        # (riders stage for free by construction — `coalesce` only takes them)
+        # *before* the labeling launch, so labels land at t + mig_s + label_s;
+        # a cost-aware rider's staging runs after (labels don't need it)
         mig_s = self.pool.migration_s(backlog.req.client, gid,
                                       backlog.req.state_bytes)
+        rider_migs = self._rider_migration_s(gid, riders)
         t_labeled = t + mig_s + label_s
         for b in to_label:
             self.sessions[b.req.client].label_and_ingest(b.idxs, t_labeled)
             b.idxs = []
         n_sessions = 1 + len(riders)
-        dur = (mig_s + label_s
+        dur = (mig_s + label_s + sum(rider_migs)
                + dev.cost.train_batch_s(n_sessions, backlog.req.k_iters))
         self.pool.grant(gid, backlog.req.client, t, dur, self.cfg.duration,
-                        mig_s)
+                        mig_s, label_s)
         for b in [backlog, *riders]:
             b.req.gpu = gid
             self._active.add(b.req.client)
-        for b in riders:
-            self.pool.attach(gid, b.req.client, t)
+        for b, r_mig in zip(riders, rider_migs):
+            self.pool.attach(gid, b.req.client, t, mig_s=r_mig)
         if riders:
             self.fused_launches += 1
             self.fused_sessions += n_sessions
         self.q.push(t + dur, "gpu_done", backlog.req.client,
                     (gid, tuple(b.req.client for b in riders)))
+
+    # ---- dual-stream service path --------------------------------------
+    def _take_segment(self, b: _Backlog) -> _Segment:
+        seg = _Segment(client=b.req.client, idxs=b.idxs)
+        b.idxs = []
+        b.segment = seg
+        return seg
+
+    def _charge_label_launch(self, gid: int, t: float,
+                             segs: list[_Segment]) -> _LabelLaunch | None:
+        """One batched labeling launch for ``segs`` on ``gid``'s label
+        stream; each segment completes at a frame-batch boundary and gets
+        its own `label_seg` event (the preemption quanta)."""
+        segs = [s for s in segs if s.idxs]
+        if not segs:
+            return None
+        cost = self.pool.device(gid).cost
+        rate = cost.teacher_infer_s * cost.label_batch_discount
+        cum, work = [], cost.label_batch_overhead_s
+        for s in segs:
+            work += len(s.idxs) * rate
+            cum.append(work)
+        start, bounds = self.pool.label_bounds(gid, t, cum)
+        launch = _LabelLaunch(gid=gid, start=start, end=bounds[-1], segs=segs)
+        for s, b in zip(segs, bounds):
+            s.bound = b
+            s.done = False
+            self.q.push(b, "label_seg", s.client, (launch, s))
+        self._label_sched[gid].append(launch)
+        self.label_batches += 1
+        return launch
+
+    def _preempt_labels(self, gid: int, t: float,
+                        member_segs: list[_Segment]) -> list[_Segment]:
+        """Split/cancel in-flight labeling on ``gid`` so a grant's own
+        labeling (and train phase) need not wait for the tail of whoever's
+        labeling. Launches that have not started are cancelled outright
+        (free reordering); the one mid-flight is cut at the next frame-batch
+        boundary when that beats waiting for its natural end, paying the
+        model's preemption cost. Returns the requeued segments, member
+        segments first, in their original order."""
+        requeued: list[_Segment] = []
+        members = {id(s) for s in member_segs}
+
+        def feeds_active_phase(segs):
+            # a mid-phase client's train charge was placed against these
+            # bounds — requeueing them would slip labels past the phase
+            # that consumes them (the preemptor's own members are not yet
+            # active, so they requeue freely)
+            return any(not s.done and id(s) not in members
+                       and s.client in self._active for s in segs)
+
+        live = [l for l in self._label_sched[gid] if l.live_at(t)]
+        # latest charge first: `truncate_label` edits the label stream's
+        # tail, so once any launch is KEPT nothing earlier may be touched
+        # (and cutting behind a kept launch would free no stream time)
+        for launch in reversed(live):
+            if launch.start >= t:  # never started: cancel, requeue all
+                if feeds_active_phase(launch.segs):
+                    break
+                launch.cut = launch.start
+                self.pool.truncate_label(gid, launch.start,
+                                         preempted_frames=0, cancel=True)
+                self.label_batches -= 1  # never ran; its relaunch recounts
+                requeued[:0] = launch.segs
+                continue
+            cut = min((s.bound for s in launch.segs if s.bound > t),
+                      default=launch.end)
+            tail = [s for s in launch.segs if s.bound > cut]
+            if feeds_active_phase(tail):
+                break
+            # a cut buys (end - cut) of label-stream headroom for the
+            # grant, but the requeued tail re-pays the launch overhead and
+            # the stream eats the preemption charge: only split when the
+            # reclaimed tail strictly exceeds that disruption, else the
+            # device thrashes at saturation (preempting pure overhead)
+            disruption = (self.pool.streams.preempt_cost_s
+                          + self.pool.device(gid).cost.label_batch_overhead_s)
+            if not tail or launch.end - cut <= disruption:
+                break
+            launch.cut = cut
+            launch.end = cut
+            self.pool.truncate_label(
+                gid, cut,
+                preempted_frames=sum(len(s.idxs) for s in tail))
+            requeued[:0] = tail
+        requeued.sort(key=lambda s: 0 if id(s) in members else 1)
+        return requeued
+
+    def _start_service_streams(self, t: float, backlog: _Backlog, gid: int,
+                               riders: list[_Backlog]) -> None:
+        """The dual-stream grant: migration and the training phase are
+        charged to the device's *train* stream, labeling launches to its
+        *label* stream, and the train charge waits only for the labels the
+        stack itself consumes — cross-client prefetch labeling runs behind
+        it (concurrently, under an ``overlap`` model). Everything is placed
+        at grant time (boundaries are deterministic), so preemption is a
+        schedule edit, not a rollback."""
+        members = [backlog, *riders]
+        self._label_sched[gid] = [l for l in self._label_sched[gid]
+                                  if l.live_at(t)]  # prune history
+        # --- labeling: what the stack needs vs what can prefetch ---------
+        # the preemption decision comes FIRST: every train-stream charge
+        # below (migration included) is placed against the label stream's
+        # post-cut schedule, so a serialized grant doesn't pay a preemption
+        # that its own staging would have swallowed anyway
+        waiting = [b.segment for b in members
+                   if b.segment is not None and not b.segment.done]
+        # preempting this device's label stream only helps when the grant
+        # would otherwise queue behind it: fresh frames to label, a
+        # member's segment sitting in one of its live launches — or, under
+        # a SERIALIZED model, any live launch at all (it holds the one
+        # clock the migration/train charges need)
+        live = [l for l in self._label_sched[gid] if l.live_at(t)]
+        member_here = any(any(s is w for w in waiting)
+                          for l in live for s in l.segs)
+        if self.cfg.streams.preempt and live and (
+                member_here or not self.cfg.streams.overlapped
+                or any(b.idxs for b in members)):
+            requeued = self._preempt_labels(gid, t, waiting)
+        else:
+            requeued = []
+        # --- staging: primary + cost-aware riders on the train stream ---
+        mig_s = self.pool.migration_s(backlog.req.client, gid,
+                                      backlog.req.state_bytes)
+        rider_migs = self._rider_migration_s(gid, riders)
+        total_mig = mig_s + sum(rider_migs)
+        if total_mig > 0.0:
+            _, mig_end = self.pool.charge(gid, "train", t, total_mig)
+        else:
+            mig_end = t
+        own = ([s for s in requeued if any(s is b.segment for b in members)]
+               + [self._take_segment(b) for b in members if b.idxs])
+        self._charge_label_launch(gid, t, own)
+        waiting = [b.segment for b in members
+                   if b.segment is not None and not b.segment.done]
+        t_labeled = max([t] + [s.bound for s in waiting])
+        # --- the training phase itself -----------------------------------
+        n_sessions = len(members)
+        train_s = self.pool.device(gid).cost.train_batch_s(
+            n_sessions, backlog.req.k_iters)
+        _, done_t = self.pool.charge(gid, "train",
+                                     max(mig_end, t_labeled), train_s)
+        # --- background prefetch: requeued non-member + still-queued -----
+        bg = [s for s in requeued if not any(s is b.segment for b in members)]
+        if self.cfg.batch_labeling:
+            bg += [self._take_segment(b) for b in self._queue if b.idxs]
+        self._charge_label_launch(gid, t, bg)
+        # --- bookkeeping (same shape as the legacy path) ------------------
+        self.pool.grant_streams(gid, backlog.req.client, t)
+        self.pool.note_migration(mig_s)
+        for b in [backlog, *riders]:
+            b.req.gpu = gid
+            self._active.add(b.req.client)
+        for b, r_mig in zip(riders, rider_migs):
+            self.pool.attach(gid, b.req.client, t, mig_s=r_mig)
+        if riders:
+            self.fused_launches += 1
+            self.fused_sessions += n_sessions
+        self.q.push(done_t, "gpu_done", backlog.req.client,
+                    (gid, tuple(b.req.client for b in riders)))
+
+    def _on_label_seg(self, ev) -> None:
+        launch, seg = ev.payload
+        if launch.cut is not None and seg.bound > launch.cut:
+            return  # requeued by a preemption; a fresh event exists
+        if seg.done:
+            return
+        seg.done = True
+        self.labels_total += len(seg.idxs)
+        self.sessions[seg.client].label_and_ingest(seg.idxs, ev.time)
 
     def _on_gpu_done(self, ev) -> None:
         gid, rider_clients = ev.payload
@@ -321,19 +559,27 @@ class ServingEngine:
             # the stacked launch just finished: run the actual fused math
             deltas = train_many([self.sessions[c] for c in clients], ev.time)
         self.served += len(clients)
+        legacy = self.cfg.streams.legacy
         t_free = ev.time
         for c, delta in zip(clients, deltas):
             s = self.sessions[c]
             if delta is not None:
-                s.note_device(gid)  # a real phase ran here (no-op grants don't)
+                # a real phase ran here (no-op grants don't record one);
+                # training phases always execute on the train stream
+                s.note_device(gid, "train")
                 comp_s = self.pool.device(gid).cost.delta_comp_s(
                     delta.total_bytes)
                 if comp_s > 0.0:
-                    # the device stays busy compressing; the delta ships
-                    # after (fused deltas compress back-to-back)
-                    self.pool.extend_busy(gid, t_free, comp_s,
-                                          self.cfg.duration)
-                    t_free = t_free + comp_s
+                    # the device stays busy compressing on its train stream;
+                    # the delta ships after (fused deltas compress
+                    # back-to-back)
+                    if legacy:
+                        self.pool.extend_busy(gid, t_free, comp_s,
+                                              self.cfg.duration)
+                        t_free = t_free + comp_s
+                    else:
+                        _, t_free = self.pool.charge(gid, "train", t_free,
+                                                     comp_s)
                 arrival = s.net.send_down(t_free, delta.total_bytes)
                 self.q.push(arrival, "delta", c, (delta, t_free))
             if self.cfg.asr_ctrl_bytes > 0:
@@ -395,7 +641,7 @@ class ServingEngine:
         lat = [l for s in self.sessions for l in s.delta_latencies]
         phases = [s.phases for s in self.sessions]
         n_req = self.served + self.dropped_requests + len(self._queue)
-        busy_s = sum(d.busy_s for d in self.pool.devices)
+        busy_s = sum(d.union_busy_s(cfg.duration) for d in self.pool.devices)
         return {
             "n_clients": len(self.sessions),
             "miou_per_client": per_client,
@@ -427,6 +673,14 @@ class ServingEngine:
             "residency_evictions": self.pool.evictions,
             "devices_per_client": [sorted(set(s.phase_devices))
                                    for s in self.sessions],
+            # dual-stream telemetry
+            "stream_mode": cfg.streams.mode,
+            "per_gpu_stream_utilization": self.pool.stream_utilization(
+                cfg.duration),
+            "overlap_s": self.pool.overlap_s_total(),
+            "preemptions": self.pool.preemptions,
+            "preempted_frames": self.pool.preempted_frames,
+            "preempt_s_total": self.pool.preempt_s_total,
             # network telemetry
             "per_client_kbps": kbps,
             "mean_up_kbps": float(np.mean([u for u, _ in kbps])),

@@ -19,14 +19,18 @@ free devices of a `resources.GPUPool`:
   growing staleness term keeps static feeds from starving outright.
 * `AffinityAware` — GainAware's ranking, placement-aware: a candidate's
   score is discounted by the weight-migration time the pool would charge
-  on that device (zero where the session is already resident), so sessions
-  stick to the GPU holding their state and the pool's migration tax is
+  on that device (zero where the session is already resident), by the
+  device's modeled phase-time excess on heterogeneous pools, and by its
+  stream backlog (dual-stream engine path) — so sessions stick to the
+  fastest idle GPU holding their state and the pool's overhead taxes are
   mostly avoided rather than mostly paid.
 
 The three base policies are deliberately affinity-*blind* in placement
 (lowest-numbered free device) — they still pay the pool's migration charge
 whenever they bounce a session across devices, which is exactly the gap
-`AffinityAware` closes.
+`AffinityAware` closes. Every policy's `coalesce` is cost-aware: a fused
+grant's spare seats go to ready requests whose staging cost on the granted
+device is zero or beaten by the fused stack's marginal train discount.
 """
 from __future__ import annotations
 
@@ -97,9 +101,14 @@ class SchedulingPolicy:
                  max_fuse: int) -> list[GPURequest]:
         """Riders for a fused grant: additional ready requests that can train
         on ``granted.gpu`` in the SAME stacked launch (`core.batched`).
-        Eligible riders cost nothing to stage there (resident, or first
-        touch) and share the grant's iteration count, so one executable
-        covers the stack. The stack (primary + riders) is bounded by
+        Riders share the grant's iteration count, so one executable covers
+        the stack. Candidate selection is *cost-aware*: a rider is taken
+        when staging it on the granted device is cheaper than the fused
+        stack's marginal discount — resident (or first-touch) riders stage
+        for free and always qualify, exactly the PR-3 rule, while a
+        foreign-resident or host-spilled session may now buy its way in
+        when its migration time is smaller than the solo-vs-marginal train
+        saving its seat unlocks. The stack (primary + riders) is bounded by
         ``max_fuse`` AND by the device's ``residency_cap`` — HBM that holds
         only N session states cannot co-train more than N, and a larger
         stack would LRU-evict its own members mid-launch. Rider *order* is a
@@ -110,12 +119,23 @@ class SchedulingPolicy:
             limit = min(limit, cap - 1)
         if limit <= 0:
             return []
-        riders = [r for r in ready
-                  if r.k_iters == granted.req.k_iters
-                  and pool.migration_s(r.client, granted.gpu,
-                                       r.state_bytes) == 0.0]
-        riders.sort(key=self._rider_order(t_now))
-        return riders[:limit]
+        cost = pool.device(granted.gpu).cost
+        k = granted.req.k_iters
+        solo_s = k * cost.train_iter_s
+        candidates = sorted((r for r in ready if r.k_iters == k),
+                            key=self._rider_order(t_now))
+        riders: list[GPURequest] = []
+        stack = 1
+        for r in candidates:
+            if len(riders) >= limit:
+                break
+            mig = pool.migration_s(r.client, granted.gpu, r.state_bytes)
+            saving = solo_s - (cost.train_batch_s(stack + 1, k)
+                               - cost.train_batch_s(stack, k))
+            if mig == 0.0 or mig < saving:
+                riders.append(r)
+                stack += 1
+        return riders
 
     def _rider_order(self, t_now: float):
         """Sort key ranking rider candidates (best first)."""
@@ -183,29 +203,61 @@ class GainAware(SchedulingPolicy):
 
 @dataclass
 class AffinityAware(GainAware):
-    """Gain-aware ranking with residency-aware placement.
+    """Gain-aware ranking with cost-aware (request, device) placement.
 
-    Jointly scores (request, device) pairs: the gain score minus the
-    migration time the pool would charge to stage that session on that
-    device, normalized by the request's update period (one period of
-    migration cancels one unit of φ). A resident pairing costs nothing, so
-    sessions gravitate to the GPU already holding their weights; a dynamic
-    feed can still justify a migration when the score gap is larger than
-    ``migration_weight`` times the move."""
+    Jointly scores (request, device) pairs: the gain score minus every
+    modeled second that running *there* — rather than on the best possible
+    device — would cost, normalized by the request's update period (one
+    period of overhead cancels one unit of φ). Three penalty terms:
+
+    * migration — the staging time the pool would charge on that device
+      (zero where the session is already resident), weighted by
+      ``migration_weight``;
+    * heterogeneity — on pools with asymmetric `GPUCostModel`s, the excess
+      of that device's modeled phase time (labeling + solo training) over
+      the cheapest device's; zero everywhere on a homogeneous pool, so this
+      term changes nothing for the PR-2/PR-3 sweeps, weighted by
+      ``compute_weight``;
+    * stream backlog — how long that device's streams defer a train launch
+      (`GPUPool.train_ready_wait_s`; nonzero only under the dual-stream
+      engine path, where a label stream can run ahead of the grants),
+      weighted by ``stream_weight``.
+
+    A resident pairing on the fastest, idlest device costs nothing, so
+    sessions gravitate there; a dynamic feed can still justify paying any
+    of the three when its score gap is large enough."""
 
     migration_weight: float = 1.0
+    compute_weight: float = 1.0
+    stream_weight: float = 1.0
     name: str = field(default="affinity", init=False)
 
     def assign(self, t_now: float, ready: list[GPURequest],
                free: list[int], pool) -> list[Assignment]:
+        def phase_s(r, g):
+            c = pool.device(g).cost
+            return (c.label_batch_s(r.n_frames)
+                    + c.train_batch_s(1, r.k_iters))
+
         ready, free = list(ready), list(free)
+        # hoisted once per assign() call — nothing below charges the pool,
+        # so phase times and stream waits are invariants; only the
+        # per-request floor moves as the free list shrinks
+        phase = {(id(r), g): phase_s(r, g) for r in ready for g in free}
+        wait = {g: pool.train_ready_wait_s(g, t_now) for g in free}
         out: list[Assignment] = []
         while ready and free:
+            floor = {id(r): min(phase[id(r), g] for g in free) for r in ready}
+
             def net(pair):
                 r, g = pair
                 mig = pool.migration_s(r.client, g, r.state_bytes)
+                het = phase[id(r), g] - floor[id(r)]
+                overhead = (self.migration_weight * mig
+                            + self.compute_weight * het
+                            + self.stream_weight * wait[g])
                 score = (self._score(t_now, r)
-                         - self.migration_weight * mig / max(r.t_update, 1e-9))
+                         - overhead / max(r.t_update, 1e-9))
                 return (score, -r.client, -r.t_request, -g)
 
             req, gid = max(((r, g) for r in ready for g in free), key=net)

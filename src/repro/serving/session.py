@@ -47,6 +47,7 @@ class SessionBase:
         self.delta_latencies: list[float] = []
         self.phases = 0
         self.phase_devices: list[int] = []  # which GPU served each phase
+        self.phase_streams: list[str] = []  # which device stream ran it
 
     def take_outbox(self) -> list[int]:
         out, self._outbox = self._outbox, []
@@ -63,8 +64,13 @@ class SessionBase:
     def apply_rate_ctrl(self, rate: float) -> None:
         self._edge_rate = rate
 
-    def note_device(self, gid: int) -> None:
+    def note_device(self, gid: int, stream: str = "train") -> None:
+        """Record where a phase physically ran: device id and, under the
+        dual-stream device model, which execution stream carried it
+        (training phases live on ``train``; the ``label`` stream only ever
+        carries teacher launches, which are not per-phase events)."""
         self.phase_devices.append(gid)
+        self.phase_streams.append(stream)
 
 
 class SegServingSession(SessionBase):

@@ -24,6 +24,7 @@ from repro.serving import (
     SegServingSession,
     ServingConfig,
     ServingEngine,
+    StreamModel,
 )
 from repro.sim.seg_world import SegWorld, phi_pixel_loss
 
@@ -80,6 +81,7 @@ def run_multiclient(
     n_gpus: int | None = None,
     affinity: bool = False,
     fuse_train: int | None = None,
+    streams: StreamModel | None = None,
     link: LinkSpec | None = None,
     serving_cfg: ServingConfig | None = None,
 ) -> dict:
@@ -93,10 +95,14 @@ def run_multiclient(
     ``n_gpus`` sizes the server's GPU pool (sessions then compete for
     (session, gpu) assignments instead of one busy flag), ``affinity=True``
     swaps in the residency-aware `AffinityAware` policy, and
-    ``fuse_train=B`` lets a granted device co-train up to B co-resident
-    sessions as one stacked scan/vmap launch (`core.batched`) priced by the
-    sublinear `GPUCostModel.train_batch_s` — the defaults keep single-GPU,
-    unfused PR-1/PR-2 results bit-identical.
+    ``fuse_train=B`` lets a granted device co-train up to B sessions whose
+    staging is free or beaten by the fused-stack discount as one stacked
+    scan/vmap launch (`core.batched`) priced by the sublinear
+    `GPUCostModel.train_batch_s`, and ``streams`` selects the per-device
+    dual-stream model (`serving.StreamModel`: overlap teacher labeling with
+    training, optionally preempting labeling launches at frame-batch
+    boundaries) — the defaults (one GPU, unfused, serialized streams, no
+    preemption) keep PR-1/PR-2/PR-3 results bit-identical.
 
     The ``duration`` kwarg governs the run: it sizes the videos AND the
     engine horizon. A ``serving_cfg`` supplies the other engine knobs
@@ -117,12 +123,14 @@ def run_multiclient(
         policy = "affinity"
     if serving_cfg is None:
         cfg = ServingConfig(duration=duration, n_gpus=n_gpus or 1,
-                            fuse_train=fuse_train or 1)
+                            fuse_train=fuse_train or 1,
+                            streams=streams or StreamModel())
     else:
         cfg = dataclasses.replace(
             serving_cfg, duration=duration,
             n_gpus=serving_cfg.n_gpus if n_gpus is None else n_gpus,
             fuse_train=(serving_cfg.fuse_train if fuse_train is None
-                        else fuse_train))
+                        else fuse_train),
+            streams=(serving_cfg.streams if streams is None else streams))
     engine = ServingEngine(sessions, policy=policy, cost=cost, cfg=cfg)
     return engine.run()

@@ -185,6 +185,42 @@ def test_exec_modes_agree():
         batched.set_exec_mode("unrolled")
 
 
+def test_auto_mode_races_once_and_caches_winner():
+    """``auto`` settles scan-vs-loop by a one-shot timed race on the first
+    real stacked batch (not the backend name): the measured winner is
+    recorded per compile key, its executable cached, and every later call
+    is a plain cache hit."""
+    batched.cache_clear()
+    pre = _pretrained()
+    small = AMSConfig(t_update=8.0, t_horizon=30.0, k_iters=2, batch_size=2,
+                      gamma=0.05, lr=2e-3, phi_target=0.15)
+    assert batched.auto_mode_info() == {}
+    batched.train_phases_fused([_session(i, pre, ams=small) for i in range(2)],
+                               6.0, force_stack=True)
+    decisions = batched.auto_mode_info()
+    assert len(decisions) == 1
+    ((backend, _), winner), = decisions.items()
+    assert winner in ("scan", "loop")
+    import jax as _jax
+    assert backend == _jax.default_backend()
+    # the race is one miss; the losing executable is not cached
+    assert batched.cache_info() == {"size": 1, "hits": 0, "misses": 1}
+    # second same-shaped fleet: decided key -> straight cache hit, and the
+    # winner matches that mode's executable bit-for-bit
+    fleet = [_session(i, pre, ams=small) for i in range(2)]
+    batched.train_phases_fused(fleet, 6.0, force_stack=True)
+    assert batched.cache_info() == {"size": 1, "hits": 1, "misses": 1}
+    assert batched.auto_mode_info() == decisions  # no re-race
+    try:
+        batched.set_exec_mode(winner)
+        forced = [_session(i, pre, ams=small) for i in range(2)]
+        batched.train_phases_fused(forced, 6.0, force_stack=True)
+    finally:
+        batched.set_exec_mode("auto")
+    for x, y in zip(fleet, forced):
+        assert _leaves_equal(x.params, y.params)
+
+
 # ---------------- executable cache ----------------
 
 

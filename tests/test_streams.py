@@ -1,0 +1,472 @@
+"""Dual-stream device model: StreamModel math, per-stream charge/truncate
+invariants, bit-identical serialized defaults vs the PR-3 engine, preemption
+conservation, cost-aware coalesce, and heterogeneous-pool placement."""
+import pytest
+from _hyp import given, settings, st  # hypothesis, or a fallback when absent
+
+from repro.core.scheduler import GPUCostModel
+from repro.serving import (
+    Assignment,
+    ClientNetwork,
+    GPUPool,
+    GPURequest,
+    LinkSpec,
+    MigrationModel,
+    ServingConfig,
+    ServingEngine,
+    StreamModel,
+    StubSession,
+    make_policy,
+)
+
+# ---------------- StreamModel ----------------
+
+
+def test_stream_model_validation():
+    assert StreamModel().legacy  # the PR-3 single clock is the default
+    assert not StreamModel(preempt=True).legacy
+    assert not StreamModel(mode="overlap").legacy
+    assert StreamModel(mode="overlap").overlapped
+    with pytest.raises(ValueError):
+        StreamModel(mode="concurrent")
+    with pytest.raises(ValueError):
+        StreamModel(slowdown=0.5)
+    with pytest.raises(ValueError):
+        StreamModel(preempt_cost_s=-1.0)
+
+
+def test_finish_time_piecewise():
+    # serialized / uncontended: plain addition
+    assert StreamModel().finish_time(2.0, 3.0, 10.0) == pytest.approx(5.0)
+    m = StreamModel(mode="overlap", slowdown=2.0)
+    # other stream idle: full rate
+    assert m.finish_time(5.0, 3.0, 4.0) == pytest.approx(8.0)
+    # fully contended: 1 s of work takes slowdown seconds
+    assert m.finish_time(0.0, 1.0, 100.0) == pytest.approx(2.0)
+    # partially contended: 2 s at half rate (1 s of work), rest at full
+    assert m.finish_time(0.0, 3.0, 2.0) == pytest.approx(4.0)
+    # full overlap: no stretch at slowdown=1
+    assert StreamModel(mode="overlap").finish_time(0.0, 3.0, 100.0) == 3.0
+
+
+def test_stream_demand_interpolates():
+    ser = StreamModel()
+    assert ser.stream_demand_s(1.3, 1.0) == pytest.approx(2.3)
+    full = StreamModel(mode="overlap", slowdown=1.0)
+    assert full.stream_demand_s(1.3, 1.0) == pytest.approx(1.3)
+    mid = StreamModel(mode="overlap", slowdown=2.0)
+    assert 1.3 < mid.stream_demand_s(1.3, 1.0) < 2.3
+    # slowdown -> inf approaches the serialized sum
+    assert StreamModel(mode="overlap", slowdown=1e9).stream_demand_s(
+        1.3, 1.0) == pytest.approx(2.3, rel=1e-6)
+
+
+# ---------------- pool stream clocks ----------------
+
+
+def test_charge_serialized_mutually_excludes():
+    pool = GPUPool(1, streams=StreamModel(preempt=True))
+    a = pool.charge(0, "label", 0.0, 2.0)
+    b = pool.charge(0, "train", 0.0, 1.0)
+    c = pool.charge(0, "label", 0.5, 1.0)
+    assert a == (0.0, 2.0)
+    assert b == (2.0, 3.0)  # serialized: waits for the label stream
+    assert c == (3.0, 4.0)  # and the next label launch waits for the train
+    assert pool.device(0).overlap_s() == 0.0
+
+
+def test_charge_overlap_runs_concurrently_with_slowdown():
+    pool = GPUPool(1, streams=StreamModel(mode="overlap", slowdown=2.0))
+    a = pool.charge(0, "label", 0.0, 4.0)
+    b = pool.charge(0, "train", 0.0, 1.0)
+    assert a == (0.0, 4.0)
+    # starts immediately; 1 s of work at half rate inside the label window
+    assert b == (0.0, 2.0)
+    assert pool.device(0).overlap_s() == pytest.approx(2.0)
+    # per-stream accounting is wall-clock occupancy
+    assert pool.device(0).stream_busy_s("label", 100.0) == pytest.approx(4.0)
+    assert pool.device(0).stream_busy_s("train", 100.0) == pytest.approx(2.0)
+    assert pool.device(0).union_busy_s(100.0) == pytest.approx(4.0)
+
+
+def test_label_bounds_and_truncate():
+    pool = GPUPool(1, streams=StreamModel(preempt=True, preempt_cost_s=0.5))
+    start, bounds = pool.label_bounds(0, 0.0, [1.0, 2.0, 4.0])
+    assert start == 0.0 and bounds == [1.0, 2.0, 4.0]
+    assert pool.stream_free_at(0, "label") == 4.0
+    free = pool.truncate_label(0, 2.0, preempted_frames=7)
+    assert free == pytest.approx(2.5)  # cut + preemption cost
+    assert pool.preemptions == 1 and pool.preempted_frames == 7
+    assert pool.preempt_s_total == pytest.approx(0.5)
+    # a cancelled (never-started) launch is removed outright, free of charge
+    start, bounds = pool.label_bounds(0, 10.0, [1.0])
+    assert start == 10.0
+    free = pool.truncate_label(0, start, preempted_frames=0, cancel=True)
+    assert free == pytest.approx(2.5)
+    assert pool.preemptions == 1  # cancels are not preemptions
+
+
+def test_train_ready_wait_respects_stream_model():
+    ser = GPUPool(1, streams=StreamModel(preempt=True))
+    ser.charge(0, "label", 0.0, 3.0)
+    assert ser.train_ready_wait_s(0, 1.0) == pytest.approx(2.0)
+    ovl = GPUPool(1, streams=StreamModel(mode="overlap"))
+    ovl.charge(0, "label", 0.0, 3.0)
+    assert ovl.train_ready_wait_s(0, 1.0) == 0.0  # label stream irrelevant
+    ovl.charge(0, "train", 0.0, 2.0)
+    assert ovl.train_ready_wait_s(0, 1.0) == pytest.approx(1.0)
+
+
+# ---------------- engine fleets ----------------
+
+
+def _fleet(n, link=None, **kw):
+    link = link or LinkSpec(up_kbps=500.0, down_kbps=1000.0)
+    return [StubSession(i, rate=0.15 if i < 2 else 1.0,
+                        dynamics=0.0005 if i < 2 else 0.004,
+                        net=ClientNetwork(link), **kw)
+            for i in range(n)]
+
+
+# ---------------- serialized default == PR-3, bit for bit ----------------
+
+# Captured from the tree at the PR-3 commit (cacaae0), before the stream
+# refactor: a fused single-GPU fair run and an unfused 2-GPU gain run (the
+# multi-GPU *fused* configs are deliberately not pinned — the cost-aware
+# coalesce satellite changes rider admission there by design).
+_PR3_GOLD = {
+    "fused_g1_fair": dict(
+        cfg=dict(duration=180.0, max_queue=8, fuse_train=4), policy="fair",
+        want={"mean_miou": 0.8843761416388888,
+              "gpu_utilization": 0.9123439111111111,
+              "phases_served": 102, "phases_deferred": 92,
+              "dropped_requests": 0,
+              "mean_up_kbps": 38.14897777777778,
+              "mean_down_kbps": 15.111111111111112,
+              "delta_latency_mean_s": 0.20999999999999938,
+              "labels_total": 732, "label_batches": 34,
+              "max_backlog": 5, "events_processed": 1846,
+              "fused_launches": 24, "fused_sessions": 82,
+              "rider_grants": 58, "migrations": 0,
+              "migration_s_total": 0.0}),
+    "unfused_g2_gain": dict(
+        cfg=dict(duration=180.0, max_queue=8, n_gpus=2), policy="gain",
+        want={"mean_miou": 0.8853762615666668,
+              "gpu_utilization": 0.5445833333333331,
+              "phases_served": 102, "phases_deferred": 68,
+              "dropped_requests": 0,
+              "mean_up_kbps": 38.14897777777778,
+              "mean_down_kbps": 15.111111111111112,
+              "delta_latency_mean_s": 0.2099999999999989,
+              "labels_total": 732, "label_batches": 51,
+              "max_backlog": 4, "events_processed": 1904,
+              "migrations": 0, "migration_s_total": 0.0}),
+}
+
+
+def test_default_streams_bit_identical_to_pr3():
+    """The default (serialized, no-preemption) stream model must reproduce
+    the PR-3 single-busy-clock engine bit-for-bit — golden numbers captured
+    before the refactor, and an *explicit* serialized StreamModel must be
+    indistinguishable from the default."""
+    for name, spec in _PR3_GOLD.items():
+        r = ServingEngine(_fleet(6), policy=spec["policy"],
+                          cfg=ServingConfig(**spec["cfg"])).run()
+        for k, v in spec["want"].items():
+            assert r[k] == v, (name, k, r[k], v)
+        assert r["preemptions"] == 0 and r["overlap_s"] == 0.0
+        explicit = ServingEngine(
+            _fleet(6), policy=spec["policy"],
+            cfg=ServingConfig(**spec["cfg"],
+                              streams=StreamModel("serialized"))).run()
+        drop = ("wall_s", "events_per_sec")
+        assert ({k: v for k, v in r.items() if k not in drop}
+                == {k: v for k, v in explicit.items() if k not in drop})
+
+
+# ---------------- dual-stream engine invariants ----------------
+
+
+def _stream_intervals(eng):
+    return {(d.gid, s): [(c.start, c.end) for c in d.charges[s]]
+            for d in eng.pool.devices for s in ("label", "train")}
+
+
+def _assert_stream_invariants(eng, horizon):
+    for (gid, stream), ivals in _stream_intervals(eng).items():
+        for a, b in ivals:
+            assert b >= a - 1e-9, (gid, stream, "negative-length charge")
+            assert a >= -1e-9, (gid, stream, "work before t=0")
+        for (_, e0), (s1, _) in zip(ivals, ivals[1:]):
+            # no negative idle: a stream never runs two launches at once
+            assert s1 >= e0 - 1e-9, (gid, stream, "stream self-overlap")
+    for d in eng.pool.devices:
+        assert d.union_busy_s(horizon) <= horizon + 1e-9
+        for s in ("label", "train"):
+            assert d.stream_busy_s(s, horizon) <= horizon + 1e-9
+
+
+def test_overlap_engine_overlaps_and_stays_bounded():
+    eng = ServingEngine(
+        _fleet(8), policy="gain",
+        cfg=ServingConfig(duration=180.0, max_queue=32, fuse_train=4,
+                          streams=StreamModel("overlap", slowdown=1.1)))
+    r = eng.run()
+    _assert_stream_invariants(eng, 180.0)
+    for s in eng.sessions:  # every phase record names its stream
+        assert len(s.phase_streams) == s.phases
+        assert all(st == "train" for st in s.phase_streams)
+    assert r["overlap_s"] > 0.0  # the two streams really ran concurrently
+    su = r["per_gpu_stream_utilization"]
+    assert su["label"][0] > 0.0 and su["train"][0] > 0.0
+    # concurrency means the union is smaller than the per-stream sum
+    assert r["gpu_utilization"] < su["label"][0] + su["train"][0]
+    # and buys throughput over the serialized clock on the same fleet
+    ser = ServingEngine(
+        _fleet(8), policy="gain",
+        cfg=ServingConfig(duration=180.0, max_queue=32, fuse_train=4)).run()
+    assert r["phases_served"] >= ser["phases_served"]
+
+
+class _RecordingStub(StubSession):
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.ingested_idxs = []
+        self.uploaded_idxs = []
+
+    def take_outbox(self):
+        out = super().take_outbox()
+        self.uploaded_idxs.extend(out)
+        return out
+
+    def label_and_ingest(self, idxs, t):
+        super().label_and_ingest(idxs, t)
+        self.ingested_idxs.extend(idxs)
+
+
+def test_preemption_conserves_labeled_frames():
+    """Preempted labeling launches requeue their remainder: across a run
+    with real preemptions no frame is labeled twice and every uploaded
+    frame is labeled, still queued, or on a still-cut segment — none
+    vanish."""
+    fleet = [_RecordingStub(i, rate=1.0, dynamics=0.004,
+                            net=ClientNetwork(LinkSpec(up_kbps=500.0,
+                                                       down_kbps=1000.0)))
+             for i in range(8)]
+    eng = ServingEngine(
+        fleet, policy="fair",
+        cfg=ServingConfig(duration=180.0, max_queue=64,
+                          streams=StreamModel("overlap", slowdown=1.1,
+                                              preempt=True,
+                                              preempt_cost_s=0.02)))
+    r = eng.run()
+    assert r["preemptions"] > 0 and r["preempted_frames"] > 0
+    assert r["dropped_requests"] == 0  # queue sized so nothing is sacrificed
+    leftover = {b.req.client: list(b.idxs) for b in eng._queue}
+    pending = {}
+    for launches in eng._label_sched.values():
+        for launch in launches:
+            for seg in launch.segs:
+                if not seg.done:
+                    pending.setdefault(seg.client, []).extend(seg.idxs)
+    for s in fleet:
+        assert len(s.ingested_idxs) == len(set(s.ingested_idxs)), (
+            f"client {s.idx} had frames labeled twice")
+        accounted = (len(s.ingested_idxs) + len(leftover.get(s.idx, []))
+                     + len(pending.get(s.idx, [])))
+        assert accounted == len(s.uploaded_idxs), (
+            f"client {s.idx}: {len(s.uploaded_idxs)} uploaded, "
+            f"{accounted} accounted for")
+    assert r["labels_total"] == sum(len(s.ingested_idxs) for s in fleet)
+    _assert_stream_invariants(eng, 180.0)
+
+
+def test_preemption_splits_inflight_launch_and_speeds_train():
+    """A grant whose labels would queue behind a long in-flight labeling
+    launch cuts it at the next frame-batch boundary: the phase completes
+    strictly earlier than without preemption, the remainder requeues."""
+    def run(preempt):
+        fleet = _fleet(2)
+        eng = ServingEngine(
+            fleet, policy="fair",
+            cfg=ServingConfig(duration=60.0,
+                              streams=StreamModel("serialized",
+                                                  preempt=preempt,
+                                                  preempt_cost_s=0.05)))
+        from repro.serving.engine import _Backlog, _Segment
+
+        # a fat foreign labeling launch is mid-flight on device 0...
+        eng._charge_label_launch(
+            0, 0.0, [_Segment(client=1, idxs=list(range(40 + 10 * i)))
+                     for i in range(3)])
+        # ...when client 0's request with fresh frames is granted at t=1
+        backlog = _Backlog(req=GPURequest(
+            client=0, t_request=1.0, n_frames=4, k_iters=20, deadline=11.0,
+            phi=1.0, t_update=10.0), idxs=[0, 1, 2, 3])
+        eng._start_service_streams(1.0, backlog, 0, [])
+        done = [e for _, _, e in eng.q._heap if e.kind == "gpu_done"]
+        return eng, done[0].time
+
+    eng_p, t_preempt = run(True)
+    eng_n, t_wait = run(False)
+    assert eng_p.pool.preemptions == 1
+    assert eng_p.pool.preempted_frames > 0
+    assert eng_n.pool.preemptions == 0
+    assert t_preempt < t_wait  # the split really unblocked the train phase
+    # the requeued remainder is rescheduled, not lost
+    live = [seg for l in eng_p._label_sched[0] for seg in l.segs
+            if not seg.done]
+    assert sum(len(s.idxs) for s in live if s.client == 1) > 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(2, 8), n_gpus=st.integers(1, 3),
+       fuse=st.integers(1, 4), overlapped=st.booleans(),
+       preempt=st.booleans(),
+       slowdown=st.sampled_from([1.0, 1.2, 2.0]))
+def test_stream_engine_property_invariants(n, n_gpus, fuse, overlapped,
+                                           preempt, slowdown):
+    """Any fleet/pool/stream model: no stream self-overlap, busy clocks
+    bounded by the horizon, phases add up, rider accounting holds."""
+    sm = StreamModel(mode="overlap" if overlapped else "serialized",
+                     slowdown=slowdown if overlapped else 1.0,
+                     preempt=preempt, preempt_cost_s=0.02)
+    eng = ServingEngine(
+        _fleet(n), policy="gain",
+        cfg=ServingConfig(duration=90.0, n_gpus=n_gpus, fuse_train=fuse,
+                          streams=sm))
+    r = eng.run()
+    _assert_stream_invariants(eng, 90.0)
+    assert sum(r["phases_per_client"]) == r["phases_served"]
+    assert r["fused_sessions"] - r["fused_launches"] == r["rider_grants"]
+    assert r["preempted_frames"] >= 0 and r["preempt_s_total"] >= 0.0
+    if not sm.overlapped:
+        assert r["overlap_s"] == 0.0
+
+
+# ---------------- cost-aware coalesce ----------------
+
+
+def _req(client, t_request=0.0, k_iters=20, state_bytes=0, phi=1.0):
+    return GPURequest(client=client, t_request=t_request, n_frames=4,
+                      k_iters=k_iters, deadline=10.0, phi=phi, t_update=10.0,
+                      state_bytes=state_bytes)
+
+
+def test_coalesce_accepts_rider_when_discount_beats_migration():
+    """ROADMAP follow-on: a rider with *nonzero* staging cost joins the
+    stack when the fused discount exceeds its migration time; an expensive
+    one still cannot."""
+    pool = GPUPool(2, migration=MigrationModel(gbps=1.0, setup_s=0.1))
+    pool.grant(0, client=0, t=0.0, dur_s=0.1, horizon_s=100.0)
+    pool.release(0)
+    pool.grant(1, client=1, t=0.0, dur_s=0.1, horizon_s=100.0)
+    pool.release(1)
+    pool.grant(1, client=2, t=0.0, dur_s=0.1, horizon_s=100.0)
+    pool.release(1)
+    p = make_policy("fair")
+    granted = Assignment(req=_req(0), gpu=0)
+    cost = GPUCostModel()
+    # client 1 resident on device 1 with a cheap state: migration 0.1 s +
+    # a few ms of bytes < the ~0.5 s solo-vs-marginal fused saving
+    cheap, dear = _req(1, state_bytes=10**6), _req(2, state_bytes=10**9)
+    saving = (20 * cost.train_iter_s
+              - (cost.train_batch_s(2, 20) - cost.train_batch_s(1, 20)))
+    assert pool.migration_s(1, 0, cheap.state_bytes) < saving
+    assert pool.migration_s(2, 0, dear.state_bytes) > saving
+    riders = p.coalesce(1.0, granted, [cheap, dear], pool, max_fuse=4)
+    assert [r.client for r in riders] == [1]
+    # zero-cost riders are always taken, exactly the PR-3 rule
+    resident = _req(1, state_bytes=10**9)
+    pool2 = GPUPool(1)
+    assert p.coalesce(1.0, granted, [resident], pool2, 4) == [resident]
+
+
+def test_engine_charges_rider_migration():
+    """A cost-aware rider's staging is real: the grant runs longer by the
+    rider's migration time and the move lands in the pool telemetry."""
+    from repro.serving.engine import _Backlog
+
+    def serve(foreign):
+        eng = ServingEngine(
+            _fleet(4), policy="fair",
+            cfg=ServingConfig(duration=120.0, n_gpus=2, fuse_train=2))
+        if foreign:
+            # client 1's state lives on device 1; riding client 0's grant
+            # on device 0 must stage it across
+            eng.pool.grant(1, client=1, t=0.0, dur_s=0.1, horizon_s=120.0)
+            eng.pool.release(1)
+        primary = _Backlog(req=_req(0), idxs=[0, 1])
+        rider = _Backlog(req=_req(1, state_bytes=1_000_000), idxs=[2, 3])
+        eng._start_service(5.0, primary, 0, [rider])
+        done = [e for _, _, e in eng.q._heap if e.kind == "gpu_done"]
+        return eng, done[0].time
+
+    eng_free, t_free = serve(False)  # first-touch rider: stages for free
+    assert eng_free.pool.migrations == 0
+    eng_paid, t_paid = serve(True)
+    assert eng_paid.pool.migrations == 1
+    assert eng_paid.pool.migration_s_total > 0.0
+    # the staging time is on the granting device's clock: gpu_done shifts
+    assert t_paid == pytest.approx(
+        t_free + eng_free.pool.migration.transfer_s(1_000_000))
+
+
+# ---------------- heterogeneous pools: cost-aware placement ----------------
+
+
+def test_affinity_prefers_cheaper_device_on_heterogeneous_pool():
+    fast = GPUCostModel()
+    slow = GPUCostModel(teacher_infer_s=0.5, train_iter_s=0.15)
+    pool = GPUPool(costs=[slow, fast])
+    p = make_policy("affinity")
+    got = p.assign(0.0, [_req(0)], [0, 1], pool)
+    assert got[0].gpu == 1  # affinity-blind would take device 0
+    # a session resident on the slow device with a big state stays put...
+    pool2 = GPUPool(costs=[slow, fast],
+                    migration=MigrationModel(gbps=1.0, setup_s=0.5))
+    pool2.grant(0, client=0, t=0.0, dur_s=0.1, horizon_s=100.0)
+    pool2.release(0)
+    heavy = _req(0, state_bytes=10**9)  # 8.5 s move >> phase-time gap
+    assert p.assign(5.0, [heavy], [0, 1], pool2)[0].gpu == 0
+    # ...but migrates to the fast device once the move is cheap enough
+    light = _req(0, state_bytes=10**6)
+    assert p.assign(5.0, [light], [0, 1], pool2)[0].gpu == 1
+
+
+def test_affinity_stream_backlog_steers_placement():
+    """Dual-stream path: a device whose streams defer training is taxed in
+    the joint (request, device) score."""
+    pool = GPUPool(2, streams=StreamModel(preempt=True))
+    pool.charge(0, "label", 0.0, 5.0)  # device 0's clock is claimed
+    p = make_policy("affinity")
+    assert p.assign(0.0, [_req(0)], [0, 1], pool)[0].gpu == 1
+    # legacy pools never report stream backlog: placement unchanged
+    legacy = GPUPool(2)
+    assert legacy.train_ready_wait_s(0, 0.0) == 0.0
+
+
+# ---------------- run_multiclient shim ----------------
+
+
+def test_run_multiclient_streams_kwarg():
+    import jax
+    import numpy as np
+
+    from repro.core.server import AMSConfig
+    from repro.models.seg.student import SegConfig, make_student
+    from repro.sim.multiclient import run_multiclient
+
+    seg = SegConfig(n_classes=5)
+    pre = make_student(seg, jax.random.PRNGKey(0))
+    ams = AMSConfig(t_update=8.0, t_horizon=30.0, k_iters=2, batch_size=2,
+                    gamma=0.05, lr=2e-3, phi_target=0.15)
+    r = run_multiclient(3, pre, seg, ams, duration=25.0,
+                        video_kw=dict(height=24, width=24, fps=2.0),
+                        fuse_train=2,
+                        streams=StreamModel("overlap", slowdown=1.1,
+                                            preempt=True,
+                                            preempt_cost_s=0.02))
+    assert r["stream_mode"] == "overlap"
+    assert np.isfinite(r["mean_miou"])
+    assert r["phases_served"] > 0

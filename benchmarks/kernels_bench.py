@@ -72,6 +72,90 @@ def fused_phase_compare(n_sessions: int = 8, k_iters: int = 20,
             "sequential_s": t_seq.s, "fused_s": t_fused.s, "ratio": ratio}
 
 
+def update_pipeline_compare(n_sessions: int = 8, k_iters: int = 20,
+                            size: int = 24) -> dict:
+    """Wall-clock for ``n_sessions`` seg sessions' post-train update
+    production (gradient-guided selection + wire-delta encode): the
+    per-session loop — B bisection/sort launches and B leaf-by-leaf
+    device->host encodes — vs the fused pipeline: ONE stacked selection
+    launch + ONE batched stacked encode (`core.selection` + `core.delta`).
+    Parameters enter the batched path already stacked (that is the shape a
+    fused train launch leaves them in); the u_prev stack is built inside the
+    timed region. Both paths are warmed (compile excluded) and the batched
+    deltas are asserted byte-identical to the per-session ones."""
+    from repro.core import selection
+    from repro.core.batched import stack_trees
+    from repro.core.delta import encode_delta, encode_delta_stack
+
+    sessions = _update_fleet(n_sessions, k_iters, size)
+    gamma = sessions[0].cfg.gamma
+    u_prevs = [s.u_prev for s in sessions]
+    params = [s.params for s in sessions]
+    params_stacked = stack_trees(params)  # a fused grant holds them stacked
+
+    def sequential():
+        out = []
+        for u, p in zip(u_prevs, params):
+            mask = selection.gradient_guided_mask(u, gamma)
+            out.append(encode_delta(p, mask))
+        return out
+
+    def fused():
+        masks = selection.stacked_gradient_guided_masks(
+            stack_trees(u_prevs), gamma)
+        return encode_delta_stack(params_stacked, masks, n_sessions)
+
+    seq_d = sequential()  # warm both paths (jit compiles excluded)
+    fus_d = fused()
+    identical = all(
+        np.array_equal(a.values, b.values) and a.packed_mask == b.packed_mask
+        and a.total_bytes == b.total_bytes for a, b in zip(seq_d, fus_d))
+    assert identical, "batched update pipeline changed wire bytes"
+    reps = 5
+    with Timer() as t_seq:
+        for _ in range(reps):
+            sequential()
+    with Timer() as t_fused:
+        for _ in range(reps):
+            fused()
+    ratio = t_fused.s / max(t_seq.s, 1e-9)
+    emit(f"kernels.update_pipeline.sequential.n{n_sessions}", t_seq.us / reps,
+         f"launches={2 * n_sessions};bytes={sum(d.total_bytes for d in seq_d)}")
+    emit(f"kernels.update_pipeline.stacked.n{n_sessions}", t_fused.us / reps,
+         f"launches=2;ratio_vs_sequential={ratio:.3f};byte_identical={identical}")
+    return {"n_sessions": n_sessions, "sequential_s": t_seq.s / reps,
+            "fused_s": t_fused.s / reps, "ratio": ratio,
+            "byte_identical": bool(identical)}
+
+
+def _update_fleet(n_sessions: int, k_iters: int, size: int):
+    """Seg sessions one phase in (u_prev populated) — the state the update
+    pipeline runs from."""
+    from repro.core.server import AMSConfig, AMSSession, Task
+    from repro.data.video import VideoConfig
+    from repro.models.seg.student import SegConfig, make_student
+    from repro.sim.seg_world import SegWorld, phi_pixel_loss
+
+    seg = SegConfig(n_classes=5)
+    ams = AMSConfig(t_update=10.0, t_horizon=60.0, k_iters=k_iters,
+                    batch_size=4, gamma=0.05, lr=2e-3, phi_target=0.15)
+    pre = make_student(seg, jax.random.PRNGKey(0))
+    out = []
+    for i in range(n_sessions):
+        world = SegWorld.make(
+            VideoConfig(seed=900 + i, height=size, width=size, fps=2.0,
+                        duration=30.0), seg)
+        task = Task(loss_and_grad=world.loss_and_grad, teacher=None,
+                    phi_loss=phi_pixel_loss)
+        s = AMSSession(task, ams, jax.tree.map(lambda x: x, pre), seed=i)
+        frames = np.stack([world.video.frame(j)[0] for j in range(8)])
+        labels = np.stack([world.teacher.label(j) for j in range(8)])
+        s.receive_labeled(frames, labels, 5.0)
+        s.train_phase(6.0)
+        out.append(s)
+    return out
+
+
 def run(quick: bool = True):
     n = 1 << 18
     rng = np.random.default_rng(0)
@@ -131,6 +215,7 @@ def run(quick: bool = True):
          f"vmem_tile_bytes={flash_ws};skip_blocks=causal/window")
 
     fused_phase_compare(n_sessions=4 if quick else 8)
+    update_pipeline_compare(n_sessions=4 if quick else 8)
 
 
 if __name__ == "__main__":

@@ -69,11 +69,14 @@ def make_stub_fleet(n: int, *, stationary_frac: float = 0.3,
 
 def run_fleet(n: int, *, n_gpus: int = 1, policy: str = "fair",
               duration: float = 240.0, max_queue: int = 32,
-              fuse_train: int = 1, streams: StreamModel | None = None) -> dict:
+              fuse_train: int = 1, streams: StreamModel | None = None,
+              cost: GPUCostModel | None = None,
+              fuse_updates: bool = True) -> dict:
     engine = ServingEngine(
-        make_stub_fleet(n), policy=policy, cost=GPUCostModel(),
+        make_stub_fleet(n), policy=policy, cost=cost or GPUCostModel(),
         cfg=ServingConfig(duration=duration, max_queue=max_queue,
                           n_gpus=n_gpus, fuse_train=fuse_train,
+                          fuse_updates=fuse_updates,
                           streams=streams or StreamModel()))
     return engine.run()
 
@@ -83,13 +86,16 @@ def sessions_sustained(n_gpus: int, *, policy: str = "fair",
                        duration: float = 240.0,
                        target: float = TARGET_MIOU,
                        fuse_train: int = 1,
-                       streams: StreamModel | None = None) -> tuple[int, dict]:
+                       streams: StreamModel | None = None,
+                       cost: GPUCostModel | None = None,
+                       fuse_updates: bool = True) -> tuple[int, dict]:
     """Largest fleet in ``counts`` whose mean mIoU holds ``target`` on an
     ``n_gpus`` pool (0 if even the smallest fleet degrades past it)."""
     best, per_count = 0, {}
     for n in counts:
         r = run_fleet(n, n_gpus=n_gpus, policy=policy, duration=duration,
-                      fuse_train=fuse_train, streams=streams)
+                      fuse_train=fuse_train, streams=streams, cost=cost,
+                      fuse_updates=fuse_updates)
         per_count[n] = r
         if r["mean_miou"] >= target:
             best = max(best, n)
@@ -230,6 +236,60 @@ def run_fused_sweep(fuse: int = 4, *, counts=(8, 10, 12, 14, 16, 20),
     return bench["fused_training"]
 
 
+def run_update_sweep(fuse: int = 4, *, counts=(8, 10, 12, 14, 16, 18, 20),
+                     duration: float = 240.0) -> dict:
+    """Fused post-train update pipeline on ONE fused GPU: sessions sustained
+    at the target mIoU when a fused grant's B selections + delta encodes are
+    priced as one amortized `GPUCostModel.update_batch_s` launch
+    (``fuse_updates``) vs B serial `update_solo_s` charges — under a cost
+    model where the update path is actually priced (select_s +
+    delta_comp_s_per_mb nonzero; the default model prices it at zero, where
+    the two engines are bit-identical). Also records the real-math
+    wall-clock compare from `kernels_bench.update_pipeline_compare` (8 seg
+    sessions, stacked select + batched encode vs per-session, byte-identical
+    wire). Updates the ``update_pipeline`` section of BENCH_serving.json."""
+    from benchmarks.kernels_bench import update_pipeline_compare
+
+    # 20 KB stub delta -> 0.1 s compress; selection launch 0.15 s: the
+    # update stage is ~1/4 of a K=20 phase, the regime ShadowTutor/EdgeSync
+    # report for partial-update production on edge-serving GPUs
+    cost = GPUCostModel(select_s=0.15, delta_comp_s_per_mb=5.0)
+    with Timer() as t:
+        seq_best, _ = sessions_sustained(1, counts=counts, duration=duration,
+                                         fuse_train=fuse, cost=cost,
+                                         fuse_updates=False)
+        bat_best, per_count = sessions_sustained(
+            1, counts=counts, duration=duration, fuse_train=fuse, cost=cost,
+            fuse_updates=True)
+    peak = per_count[max(bat_best, counts[0])]
+    up = peak["update_pipeline"]
+    emit(f"serving_scale.update.g1.f{fuse}", t.us,
+         f"sustained_per_session={seq_best};sustained_batched={bat_best};"
+         f"target_miou={TARGET_MIOU};"
+         f"batched_launches_at_peak={up['batched_launches']};"
+         f"update_s_saved_at_peak={up['update_s_saved']:.1f}")
+    wall = update_pipeline_compare()
+    bench = {
+        "update_pipeline": {
+            "fuse_train": fuse,
+            "duration_s": duration,
+            "target_miou": TARGET_MIOU,
+            "cost": {"select_s": cost.select_s,
+                     "delta_comp_s_per_mb": cost.delta_comp_s_per_mb,
+                     "update_setup_s": cost.update_setup_s,
+                     "update_discount": cost.update_discount},
+            "sessions_sustained_1gpu": {"per_session": seq_best,
+                                        "batched": bat_best},
+            "batched_launches_at_peak": up["batched_launches"],
+            "batched_sessions_at_peak": up["batched_sessions"],
+            "update_s_saved_at_peak": up["update_s_saved"],
+            "wallclock_8_sessions_select_encode": wall,
+        }
+    }
+    _write_bench(bench)
+    return bench["update_pipeline"]
+
+
 def run_overlap_sweep(fuse: int = 4, *, counts=(10, 12, 14, 16, 18, 20),
                       duration: float = 240.0, slowdown: float = 1.1,
                       preempt_cost: float = 0.02) -> dict:
@@ -294,8 +354,34 @@ def main() -> None:
                     help="dual-stream sweep: sessions sustained on 1 fused "
                          "GPU with label/train stream overlap + preemptible "
                          "labeling vs the serialized single-clock baseline")
+    ap.add_argument("--update-pipeline", action="store_true",
+                    help="fused update-pipeline sweep: sessions sustained "
+                         "on 1 fused GPU with amortized batched "
+                         "select+encode pricing vs per-session charges, "
+                         "plus the real-math byte-identical wall-clock "
+                         "compare")
     ap.add_argument("--duration", type=float, default=None)
     args = ap.parse_args()
+    if args.smoke and args.update_pipeline:
+        ub = run_update_sweep()
+        seq = ub["sessions_sustained_1gpu"]["per_session"]
+        bat = ub["sessions_sustained_1gpu"]["batched"]
+        assert seq > 0, "per-session update pricing sustains nothing"
+        assert bat >= seq, (
+            f"batched update pipeline should never sustain fewer sessions "
+            f"(got {bat} vs per-session {seq})")
+        assert ub["update_s_saved_at_peak"] > 0.0
+        wall = ub["wallclock_8_sessions_select_encode"]
+        assert wall["byte_identical"], "batched encode changed wire bytes"
+        assert wall["ratio"] <= 0.6, (
+            f"batched select+encode for 8 sessions is {wall['ratio']:.2f}x "
+            f"sequential; expected <= 0.6x")
+        print(f"serving_scale update-pipeline smoke OK (sustained {seq} -> "
+              f"{bat} sessions on 1 GPU, select+encode {wall['ratio']:.2f}x, "
+              f"{ub['update_s_saved_at_peak']:.1f}s device time saved at "
+              f"peak)")
+        print("serving_scale smoke OK")
+        return
     if args.smoke and args.overlap:
         ob = run_overlap_sweep()
         ser = ob["sessions_sustained_1gpu"]["serialized"]
@@ -358,6 +444,8 @@ def main() -> None:
             run_fused_sweep(duration=args.duration or 240.0)
         if args.overlap:
             run_overlap_sweep(duration=args.duration or 240.0)
+        if args.update_pipeline:
+            run_update_sweep(duration=args.duration or 240.0)
 
 
 if __name__ == "__main__":

@@ -73,6 +73,11 @@ def main():
         print(f"fused training: {out['fused_launches']} stacked launches "
               f"covering {out['fused_sessions']} sessions "
               f"({out['rider_grants']} riders)")
+        up = out["update_pipeline"]
+        print(f"update pipeline: {up['stacked_select_launches']} stacked "
+              f"selection launches ({up['stacked_select_sessions']} "
+              f"sessions), {up['stacked_encode_launches']} batched encodes "
+              f"({up['stacked_encode_sessions']} deltas)")
     if out["stream_mode"] != "serialized" or out["preemptions"]:
         su = out["per_gpu_stream_utilization"]
         print(f"streams [{out['stream_mode']}]: label util "

@@ -36,6 +36,16 @@ echo "== fused-training smoke: benchmarks.serving_scale --smoke --fused =="
 python -m benchmarks.serving_scale --smoke --fused
 fused_smoke=$?
 
+echo "== update-pipeline smoke: benchmarks.serving_scale --smoke --update-pipeline =="
+# asserts the fused post-train update pipeline (stacked selection + batched
+# delta encode, amortized update_batch_s pricing) sustains at least as many
+# sessions on one fused GPU as per-session pricing, that the real-math
+# batched select+encode for 8 seg sessions is <= 0.6x sequential wall-clock
+# with byte-identical wire deltas; updates the update_pipeline section of
+# BENCH_serving.json
+python -m benchmarks.serving_scale --smoke --update-pipeline
+update_smoke=$?
+
 echo "== dual-stream smoke: benchmarks.serving_scale --smoke --overlap =="
 # asserts the dual-stream device model (label/train stream overlap with
 # preemptible labeling launches) sustains STRICTLY more sessions on one
@@ -45,6 +55,6 @@ echo "== dual-stream smoke: benchmarks.serving_scale --smoke --overlap =="
 python -m benchmarks.serving_scale --smoke --overlap
 overlap_smoke=$?
 
-echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke, overlap smoke exit=$overlap_smoke"
-[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && [ "$overlap_smoke" -eq 0 ] && echo "CI OK"
-exit $((tier1 | smoke | pool_smoke | fused_smoke | overlap_smoke))
+echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke, update smoke exit=$update_smoke, overlap smoke exit=$overlap_smoke"
+[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && [ "$update_smoke" -eq 0 ] && [ "$overlap_smoke" -eq 0 ] && echo "CI OK"
+exit $((tier1 | smoke | pool_smoke | fused_smoke | update_smoke | overlap_smoke))

@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import selection
+from repro.core.delta import encode_delta_stack
 from repro.core.masked_adam import masked_adam_update, momentum_update
 
 # ---------------------------------------------------------------------------
@@ -49,11 +51,21 @@ from repro.core.masked_adam import masked_adam_update, momentum_update
 # ---------------------------------------------------------------------------
 
 
+@jax.jit
+def _stack_impl(trees: tuple):
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+
 def stack_trees(trees: list):
-    """Stack B same-structure pytrees along a new leading session axis."""
+    """Stack B same-structure pytrees along a new leading session axis.
+
+    Jitted: the whole tree stacks in ONE launch (compile-cached by
+    structure/shape) instead of one `jnp.stack` dispatch per leaf — at
+    fleet scale the per-leaf dispatch overhead was most of the cost of
+    assembling a stacked selection launch."""
     if not trees:
         raise ValueError("stack_trees needs at least one tree")
-    return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+    return _stack_impl(tuple(trees))
 
 
 def unstack_tree(tree, n: int) -> list:
@@ -61,12 +73,20 @@ def unstack_tree(tree, n: int) -> list:
     return [jax.tree.map(lambda l: l[i], tree) for i in range(n)]
 
 
+def _dtype_name(leaf) -> str:
+    # leaves are jax/numpy arrays with a .dtype attribute; the asarray
+    # fallback (python scalars) is kept off the hot path — going through
+    # jnp.asarray for every leaf dominated the compile-key cost at scale
+    dt = getattr(leaf, "dtype", None)
+    return dt.name if dt is not None else np.asarray(leaf).dtype.name
+
+
 def tree_struct(tree) -> Hashable:
     """Hashable shape/dtype/structure fingerprint of a pytree — the part of
     a compile key that decides whether two sessions can share an executable."""
     leaves, treedef = jax.tree.flatten(tree)
     return (treedef,
-            tuple((tuple(l.shape), jnp.asarray(l).dtype.name) for l in leaves))
+            tuple((tuple(l.shape), _dtype_name(l)) for l in leaves))
 
 
 # ---------------------------------------------------------------------------
@@ -240,27 +260,94 @@ def fused_phase_fn(loss_and_grad, *, struct: Hashable, k_iters: int,
 # fused phase over live sessions
 # ---------------------------------------------------------------------------
 
+# update-pipeline telemetry: how much of the post-train select/encode work
+# ran stacked (one launch / one transfer pair per fused group) instead of
+# per-session. The serving engine snapshots this around a run.
+_UPDATE_STATS = {"stacked_select_launches": 0, "stacked_select_sessions": 0,
+                 "stacked_encode_launches": 0, "stacked_encode_sessions": 0}
+
+
+def update_pipeline_info() -> dict:
+    """Counters for the fused post-train update pipeline (stacked selection
+    launches + batched delta encodes and the sessions they covered)."""
+    return dict(_UPDATE_STATS)
+
+
+def update_pipeline_reset() -> None:
+    for k in _UPDATE_STATS:
+        _UPDATE_STATS[k] = 0
+
+
+def _mask_struct(s, mask) -> Hashable:
+    """Shape fingerprint of the phase's mask tree. A deferred gradient-
+    guided mask (None) has param-shaped bool leaves by construction, so its
+    struct is derivable without materializing it."""
+    if mask is not None:
+        return tree_struct(mask)
+    leaves, treedef = jax.tree.flatten(s.params)
+    return (treedef, tuple((tuple(l.shape), "bool") for l in leaves))
+
 
 def _group_key(s, mask, frames, labels) -> Hashable:
     cfg = s.cfg
     return (s.task.loss_and_grad,
-            tree_struct((s.params, s.opt_state, mask)),
+            tree_struct((s.params, s.opt_state)), _mask_struct(s, mask),
             cfg.k_iters, cfg.optimizer, cfg.lr, cfg.b1, cfg.b2, cfg.eps,
             cfg.momentum,
+            # the update pipeline batches selection (keyed by γ/strategy)
+            # and delta encode (keyed by wire dtype) across the group, so
+            # they must agree for sessions to share a fused launch
+            cfg.strategy, cfg.gamma, cfg.value_dtype,
             tuple(frames.shape), str(frames.dtype),
             tuple(labels.shape), str(labels.dtype))
+
+
+def _stacked_masks(members, force_stack: bool):
+    """The group's stacked mask tree, batching deferred gradient-guided
+    selections into one vmapped launch.
+
+    ``members`` carry mask=None where selection was deferred
+    (`AMSSession._select_mask_or_defer`); those sessions' ``u_prev`` trees
+    stack into a single `selection.stacked_gradient_guided_masks` call —
+    B thresholds + B mask trees from one executable instead of B solo
+    bisections. Concrete masks (first-phase random, Table-3 ablations)
+    stack as-is; a mixed group re-stacks device-side slices (no host
+    round-trip)."""
+    deferred = [j for j, m in enumerate(members) if m[2] is None]
+    gamma = members[0][1].cfg.gamma
+    if len(deferred) >= 2 or (deferred and force_stack):
+        u_stack = stack_trees([members[j][1].u_prev for j in deferred])
+        stacked_d = selection.stacked_gradient_guided_masks(u_stack, gamma)
+        _UPDATE_STATS["stacked_select_launches"] += 1
+        _UPDATE_STATS["stacked_select_sessions"] += len(deferred)
+        if len(deferred) == len(members):
+            return stacked_d
+        per = {j: jax.tree.map(lambda l, k=k: l[k], stacked_d)
+               for k, j in enumerate(deferred)}
+    else:
+        per = {j: selection.gradient_guided_mask(members[j][1].u_prev, gamma)
+               for j in deferred}
+    masks = [per.get(j, m[2]) for j, m in enumerate(members)]
+    return stack_trees(masks)
 
 
 def train_phases_fused(sessions: list, t_now: float,
                        force_stack: bool = False) -> list:
     """Run one training phase for several sessions as fused launches.
 
-    Per-session host-side work (mask selection, replay sampling, delta
-    encoding, ASR/ATR bookkeeping) happens in session order, consuming each
-    session's RNG streams exactly as its own ``train_phase`` would. Sessions
-    that share a compile key — same loss callable, shapes, K, optimizer —
-    are stacked and executed as ONE scan/vmap launch; a session with nothing
-    to train yields None in its slot, exactly like ``train_phase``.
+    Per-session host-side work (replay sampling, ASR/ATR bookkeeping)
+    happens in session order, consuming each session's RNG streams exactly
+    as its own ``train_phase`` would. Sessions that share a compile key —
+    same loss callable, shapes, K, optimizer, selection/wire recipe — are
+    stacked and executed as ONE scan/vmap launch; a session with nothing to
+    train yields None in its slot, exactly like ``train_phase``.
+
+    The post-train update pipeline is fused too: the group's gradient-guided
+    selections run as one stacked bisection launch (`core.selection`), and
+    the B wire deltas come from one batched device->host encode
+    (`delta.encode_delta_stack`, byte-identical to per-session encoding) —
+    no per-session serial stage is left between the fused launch and the
+    deltas.
 
     Singleton groups take the sequential step path (bitwise-identical to
     ``train_phase``); pass ``force_stack=True`` to push even B=1 through the
@@ -269,23 +356,25 @@ def train_phases_fused(sessions: list, t_now: float,
     results: dict[int, object] = {}
     groups: dict[Hashable, list] = defaultdict(list)
     for i, s in enumerate(sessions):
-        prep = s._prepare_phase(t_now)
+        prep = s._prepare_phase_deferred(t_now)
         if prep is None:
             results[i] = None
             continue
-        mask, frames, labels = prep
+        mask, frames, labels = prep  # mask None = deferred gradient-guided
         groups[_group_key(s, mask, frames, labels)].append(
             (i, s, mask, frames, labels))
 
     for members in groups.values():
         if len(members) == 1 and not force_stack:
             i, s, mask, frames, labels = members[0]
+            if mask is None:
+                mask = selection.gradient_guided_mask(s.u_prev, s.cfg.gamma)
             results[i] = s._run_phase_prepared(t_now, mask, frames, labels)
             continue
         ss = [m[1] for m in members]
         params = stack_trees([s.params for s in ss])
         opt = stack_trees([s.opt_state for s in ss])
-        mask = stack_trees([m[2] for m in members])
+        mask = _stacked_masks(members, force_stack)
         # batches: per-session (K, batch, ...) -> scan-major (K, B, batch, ...)
         frames = jnp.stack([m[3] for m in members], axis=1)
         labels = jnp.stack([m[4] for m in members], axis=1)
@@ -299,9 +388,15 @@ def train_phases_fused(sessions: list, t_now: float,
         params, opt, u, losses = phase(params, opt, mask, frames, labels)
         losses = np.asarray(losses)
         b = len(members)
-        for j, (i, s, m, _, _), p_j, o_j, u_j in zip(
+        deltas = encode_delta_stack(params, mask, b, s0.cfg.value_dtype)
+        _UPDATE_STATS["stacked_encode_launches"] += 1
+        _UPDATE_STATS["stacked_encode_sessions"] += b
+        for j, (i, s, _, _, _), p_j, o_j, u_j in zip(
                 range(b), members, unstack_tree(params, b),
                 unstack_tree(opt, b), unstack_tree(u, b)):
+            # the delta is already encoded (batched), so no per-member mask
+            # slice is ever consumed — don't dispatch B tree-slicings for it
             results[i] = s._commit_phase(t_now, p_j, o_j, u_j,
-                                         float(losses[j]), m)
+                                         float(losses[j]), None,
+                                         delta=deltas[j])
     return [results[i] for i in range(len(sessions))]

@@ -41,11 +41,23 @@ def _flatten(tree) -> np.ndarray:
     return np.concatenate(leaves) if leaves else np.zeros((0,))
 
 
-# reusable flat-mask scratch, keyed by total parameter count: encode_delta
-# runs once per train phase per session, and re-allocating an N-bool buffer
-# (plus two full flatten/concat passes) per call showed up at fleet scale.
-# Not thread-safe — the serving engine is single-threaded by construction.
-_MASK_SCRATCH: dict[int, np.ndarray] = {}
+# reusable flat-mask scratch: encode_delta runs once per train phase per
+# session, and re-allocating an N-bool buffer (plus two full flatten/concat
+# passes) per call showed up at fleet scale. Keyed by (n_total, value_dtype)
+# so interleaved encodes of same-sized trees at different wire dtypes can
+# never alias each other's in-flight buffer (a hazard once callers hold a
+# delta across a later encode). Not thread-safe — the serving engine is
+# single-threaded by construction.
+_MASK_SCRATCH: dict[tuple[int, str], np.ndarray] = {}
+
+
+def _pack_mask_bits(flat_m: np.ndarray) -> bytes:
+    """gzip'd packed bit-vector over one flat bool mask — the wire format.
+
+    mtime=0 pins the 4-byte gzip MTIME header field: the wire encoding is
+    a pure function of the mask (same total_bytes, no wall-clock leakage)."""
+    return gzip.compress(np.packbits(flat_m).tobytes(), compresslevel=6,
+                         mtime=0)
 
 
 def encode_delta(params_new, mask, value_dtype="float16") -> ModelDelta:
@@ -56,9 +68,10 @@ def encode_delta(params_new, mask, value_dtype="float16") -> ModelDelta:
     p_leaves = jax.tree.leaves(params_new)
     m_leaves = jax.tree.leaves(mask)
     n_total = sum(l.size for l in p_leaves)
-    flat_m = _MASK_SCRATCH.get(n_total)
+    key = (n_total, str(value_dtype))
+    flat_m = _MASK_SCRATCH.get(key)
     if flat_m is None or n_total == 0:
-        flat_m = _MASK_SCRATCH.setdefault(n_total, np.empty(n_total, bool))
+        flat_m = _MASK_SCRATCH.setdefault(key, np.empty(n_total, bool))
     picked, off = [], 0
     for p, m in zip(p_leaves, m_leaves):
         m_flat = np.asarray(m).reshape(-1).astype(bool)
@@ -67,12 +80,87 @@ def encode_delta(params_new, mask, value_dtype="float16") -> ModelDelta:
         off += m_flat.size
     values = (np.concatenate(picked) if picked
               else np.zeros((0,))).astype(value_dtype)
-    # mtime=0 pins the 4-byte gzip MTIME header field: the wire encoding is
-    # a pure function of the mask (same total_bytes, no wall-clock leakage)
-    packed = gzip.compress(np.packbits(flat_m).tobytes(), compresslevel=6,
-                           mtime=0)
+    packed = _pack_mask_bits(flat_m)
     return ModelDelta(values=values, packed_mask=packed, n_total=n_total,
                       value_dtype=value_dtype)
+
+
+# ---------------------------------------------------------------------------
+# batched encode (fused post-train update pipeline)
+# ---------------------------------------------------------------------------
+
+# One cached flatten/cast executable per (stacked struct, value_dtype) —
+# the `core.batched` compile-key cache pattern. The executable keeps the
+# masked-value cast and the mask flattening ON DEVICE for the whole stack,
+# so a fused grant's B deltas cost ONE stacked device->host transfer pair
+# instead of B x n_leaves leaf-by-leaf `np.asarray` pulls.
+_STACK_CACHE: dict = {}
+_STACK_HITS = 0
+_STACK_MISSES = 0
+
+
+def stack_cache_info() -> dict:
+    """Hook for tests/telemetry: how often did fused grants share a stacked
+    encode executable?"""
+    return {"size": len(_STACK_CACHE), "hits": _STACK_HITS,
+            "misses": _STACK_MISSES}
+
+
+def stack_cache_clear() -> None:
+    global _STACK_HITS, _STACK_MISSES
+    _STACK_CACHE.clear()
+    _STACK_HITS = _STACK_MISSES = 0
+
+
+def _stack_flatten_fn(value_dtype: str):
+    @jax.jit
+    def flatten(params_stacked, mask_stacked):
+        vals = jnp.concatenate(
+            [l.reshape(l.shape[0], -1).astype(value_dtype)
+             for l in jax.tree.leaves(params_stacked)], axis=1)
+        bits = jnp.concatenate(
+            [l.reshape(l.shape[0], -1).astype(bool)
+             for l in jax.tree.leaves(mask_stacked)], axis=1)
+        return vals, bits
+
+    return flatten
+
+
+def encode_delta_stack(params_stacked, mask_stacked, n_sessions: int,
+                       value_dtype="float16") -> list[ModelDelta]:
+    """B sessions' deltas from stacked trees in one device round-trip.
+
+    ``params_stacked``/``mask_stacked`` carry a leading session axis (the
+    shape a fused train launch already holds them in). The fp16 cast and the
+    per-leaf flattening run on device over the whole stack, then ONE stacked
+    transfer pair lands ``(B, n_total)`` values + mask bits on the host; the
+    per-session gather and the gzip'd bit-vector pack reuse `encode_delta`'s
+    wire format. Each returned delta is byte-identical to
+    ``encode_delta(params_b, mask_b, value_dtype)`` — the cast commutes with
+    the gather elementwise, so casting device-side first changes no bytes."""
+    global _STACK_HITS, _STACK_MISSES
+    p_leaves, treedef = jax.tree.flatten(params_stacked)
+    n_total = sum(int(np.prod(l.shape[1:])) for l in p_leaves)
+    key = (treedef,
+           tuple((tuple(l.shape), l.dtype.name) for l in p_leaves),
+           str(value_dtype))
+    fn = _STACK_CACHE.get(key)
+    if fn is None:
+        _STACK_MISSES += 1
+        fn = _stack_flatten_fn(str(value_dtype))
+        _STACK_CACHE[key] = fn
+    else:
+        _STACK_HITS += 1
+    vals_dev, bits_dev = fn(params_stacked, mask_stacked)
+    vals = np.asarray(vals_dev)  # ONE stacked pull each, not B x n_leaves
+    bits = np.asarray(bits_dev)
+    out = []
+    for b in range(n_sessions):
+        flat_m = bits[b]
+        out.append(ModelDelta(values=vals[b][flat_m],
+                              packed_mask=_pack_mask_bits(flat_m),
+                              n_total=n_total, value_dtype=value_dtype))
+    return out
 
 
 def apply_delta(params_old, delta: ModelDelta):

@@ -22,6 +22,16 @@ class GPUCostModel:
     # top-gamma% delta selection + entropy coding runs on the device after a
     # phase (paper §3.1.2); 0.0 keeps the seed/PR-1 behavior (free)
     delta_comp_s_per_mb: float = 0.0
+    # gradient-guided coordinate selection (bisection/sort launch) per
+    # session; 0.0 keeps the selection stage unmodeled (the PR-4 behavior)
+    select_s: float = 0.0
+    # fused post-train update pipeline (core.batched + core.delta): a fused
+    # grant's B selections run as one stacked launch and its B deltas as one
+    # batched device->host encode — a setup charge plus discounted marginal
+    # riders, mirroring train_batch_s. Applies only when the update path is
+    # priced at all (select_s or delta_comp_s_per_mb nonzero).
+    update_setup_s: float = 0.02
+    update_discount: float = 0.4
     # fused cross-session training (core.batched): B co-resident sessions'
     # phases run as one stacked scan/vmap launch — a setup charge plus a
     # sublinear per-session marginal cost (no B x K dispatch overhead, better
@@ -63,6 +73,27 @@ class GPUCostModel:
         if nbytes <= 0:
             return 0.0
         return self.delta_comp_s_per_mb * nbytes / 1e6
+
+    def update_solo_s(self, nbytes: int) -> float:
+        """One session's post-train update production: coordinate selection
+        plus delta compression (0.0 when both stages are unmodeled)."""
+        return self.select_s + self.delta_comp_s(nbytes)
+
+    def update_batch_s(self, bytes_list) -> float:
+        """One fused update launch producing ``len(bytes_list)`` deltas:
+        the stacked selection + batched encode replace B serial
+        select/gather/pack round-trips, so the primary pays full price and
+        each rider a discounted marginal cost after a stacking setup charge.
+        B=1 is exactly `update_solo_s`, and an unpriced pipeline (all solo
+        costs zero) stays free — no setup charge appears out of nowhere, so
+        default-cost engines are bit-identical."""
+        costs = [self.update_solo_s(b) for b in bytes_list]
+        if not costs or sum(costs) <= 0.0:
+            return 0.0
+        if len(costs) == 1:
+            return costs[0]
+        return (self.update_setup_s + costs[0]
+                + self.update_discount * sum(costs[1:]))
 
 
 def next_in_turn(waiting: Iterable[int], turn: int, n_clients: int) -> int | None:

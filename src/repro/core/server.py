@@ -144,16 +144,45 @@ class AMSSession:
             cfg.strategy, params=self.params, u_prev=self.u_prev, frac=cfg.gamma, rng=k
         )
 
+    def _select_mask_or_defer(self):
+        """`_select_mask` with the gradient-guided launch left pending.
+
+        A gradient-guided selection (the non-first-phase common case) is a
+        pure function of ``u_prev`` — no RNG — so the fused pipeline can
+        batch B of them into ONE vmapped bisection launch
+        (`selection.stacked_gradient_guided_masks`). This consumes the
+        session RNGs exactly as `_select_mask` does (the jrng split happens
+        even when its key goes unused) and returns None for "deferred:
+        stack me"; every other strategy returns its concrete mask."""
+        cfg = self.cfg
+        if cfg.strategy == "gradient_guided" and self.u_prev is not None:
+            self.jrng, _ = jax.random.split(self.jrng)
+            return None
+        return self._select_mask()
+
     def _prepare_phase(self, t_now: float):
         """Host-side phase setup: select the coordinate mask and draw all K
         replay minibatches, consuming the session RNGs exactly as the
         sequential loop does. Returns ``(mask, frames, labels)`` with
         frames/labels stacked as (K, batch, ...), or None when there is
         nothing to train on."""
+        prep = self._prepare_phase_deferred(t_now)
+        if prep is None:
+            return None
+        mask, frames, labels = prep
+        if mask is None:
+            mask = selection.gradient_guided_mask(self.u_prev, self.cfg.gamma)
+        return mask, frames, labels
+
+    def _prepare_phase_deferred(self, t_now: float):
+        """`_prepare_phase` for the fused pipeline: identical RNG
+        consumption and batch shapes, but a gradient-guided mask slot is
+        returned as None (deferred) so `core.batched` can run one stacked
+        selection launch for the whole group instead of B solo ones."""
         cfg = self.cfg
         if len(self.buffer) == 0:
             return None
-        mask = self._select_mask()
+        mask = self._select_mask_or_defer()
         batches = []
         for _ in range(cfg.k_iters):
             batch = self.buffer.sample(self.rng, cfg.batch_size, t_now)
@@ -184,13 +213,17 @@ class AMSSession:
         return self._commit_phase(t_now, params, opt_state, u, float(loss), mask)
 
     def _commit_phase(self, t_now: float, params, opt_state, u, loss: float,
-                      mask) -> ModelDelta:
+                      mask, delta: ModelDelta | None = None) -> ModelDelta:
         """Adopt a finished phase's state and produce the wire delta — shared
-        tail of the sequential and fused paths."""
+        tail of the sequential and fused paths. A fused group encodes the
+        whole stack's deltas in one batched device round-trip
+        (`delta.encode_delta_stack`) and passes each session's slice in as
+        ``delta`` (byte-identical to encoding here)."""
         cfg = self.cfg
         self.params, self.opt_state, self.u_prev = params, opt_state, u
         self.phase += 1
-        delta = encode_delta(params, mask, cfg.value_dtype)
+        if delta is None:
+            delta = encode_delta(params, mask, cfg.value_dtype)
         # ATR: stretch/reset T_update from the ASR rate (Appendix D)
         if cfg.atr_enabled:
             self.t_update = self.atr.update(self.asr.rate)

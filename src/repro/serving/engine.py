@@ -61,6 +61,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.batched import update_pipeline_info
 from repro.core.scheduler import GPUCostModel
 from repro.serving.events import EventQueue
 from repro.serving.policies import GPURequest, SchedulingPolicy, make_policy
@@ -94,6 +95,13 @@ class ServingConfig:
     # executable priced by `GPUCostModel.train_batch_s`. 1 == coalescing
     # off, PR-2 bit-identical.
     fuse_train: int = 1
+    # fused post-train update pipeline: a fused grant's B deltas are
+    # produced by ONE stacked selection launch + ONE batched encode, priced
+    # by the amortized `GPUCostModel.update_batch_s` instead of B serial
+    # `update_solo_s` charges. No-op until the update path is priced
+    # (select_s / delta_comp_s_per_mb), so defaults stay bit-identical;
+    # False keeps the per-session pricing (the A/B lever for benchmarks).
+    fuse_updates: bool = True
     # ---- dual-stream device model (resources.StreamModel) ----------------
     # label vs train stream interaction per device. The default (serialized,
     # no preemption) is the PR-3 single busy clock, bit-for-bit.
@@ -113,6 +121,7 @@ class _Segment:
     idxs: list
     bound: float = 0.0  # absolute completion time in its current launch
     done: bool = False
+    preempts: int = 0  # times this batch was requeued by someone else's cut
 
 
 @dataclass
@@ -172,6 +181,11 @@ class ServingEngine:
         self.max_backlog = 0
         self.fused_launches = 0  # grants that carried >= 1 rider
         self.fused_sessions = 0  # sessions trained inside those launches
+        # update-pipeline telemetry (post-train selection + delta encode)
+        self.update_batched_launches = 0  # fused grants priced as one update
+        self.update_batched_sessions = 0  # deltas produced by those launches
+        self.update_s_charged = 0.0  # device time actually charged
+        self.update_s_sequential = 0.0  # what per-session pricing would cost
 
     # ---- admission control ---------------------------------------------
     def _admit_sessions(self) -> None:
@@ -202,9 +216,18 @@ class ServingEngine:
                 train_s = self.cost.train_batch_s(fuse, s.k_iters) / fuse
             else:
                 train_s = s.k_iters * self.cost.train_iter_s
+            # post-train update production (selection + delta encode) runs
+            # on the same train stream; priced amortized when fused grants
+            # will batch it (zero while the update path is unmodeled)
+            hint = getattr(s, "delta_bytes_hint", 0)
+            if fuse > 1 and self.cfg.fuse_updates:
+                update_s = self.cost.update_batch_s([hint] * fuse) / fuse
+            else:
+                update_s = self.cost.update_solo_s(hint)
             # overlap-aware projection: concurrent streams demand less than
             # the serialized sum (serialized: exactly label_s + train_s)
-            demand = self.cfg.streams.stream_demand_s(label_s, train_s)
+            demand = self.cfg.streams.stream_demand_s(label_s,
+                                                      train_s + update_s)
             rho.append(demand / max(s.t_update, 1e-9))
         if budget is None:  # index order: keeps the load sum bit-identical
             order = range(len(self.sessions))
@@ -419,6 +442,7 @@ class ServingEngine:
         segments first, in their original order."""
         requeued: list[_Segment] = []
         members = {id(s) for s in member_segs}
+        max_preempts = self.cfg.streams.max_seg_preempts
 
         def feeds_active_phase(segs):
             # a mid-phase client's train charge was placed against these
@@ -428,24 +452,39 @@ class ServingEngine:
             return any(not s.done and id(s) not in members
                        and s.client in self._active for s in segs)
 
+        def has_aged_out(segs):
+            # priority aging: a frame batch already requeued max_seg_preempts
+            # times is uncuttable — its labels cannot be pushed back again,
+            # so repeated preemption can't grow one victim's label staleness
+            # without bound (the preemptor's own members requeue into the
+            # grant's OWN launch, which moves them earlier, so they never age)
+            return any(not s.done and id(s) not in members
+                       and s.preempts >= max_preempts for s in segs)
+
+        def note_requeue(segs):
+            for s in segs:
+                if id(s) not in members:
+                    s.preempts += 1
+
         live = [l for l in self._label_sched[gid] if l.live_at(t)]
         # latest charge first: `truncate_label` edits the label stream's
         # tail, so once any launch is KEPT nothing earlier may be touched
         # (and cutting behind a kept launch would free no stream time)
         for launch in reversed(live):
             if launch.start >= t:  # never started: cancel, requeue all
-                if feeds_active_phase(launch.segs):
+                if feeds_active_phase(launch.segs) or has_aged_out(launch.segs):
                     break
                 launch.cut = launch.start
                 self.pool.truncate_label(gid, launch.start,
                                          preempted_frames=0, cancel=True)
                 self.label_batches -= 1  # never ran; its relaunch recounts
+                note_requeue(launch.segs)
                 requeued[:0] = launch.segs
                 continue
             cut = min((s.bound for s in launch.segs if s.bound > t),
                       default=launch.end)
             tail = [s for s in launch.segs if s.bound > cut]
-            if feeds_active_phase(tail):
+            if feeds_active_phase(tail) or has_aged_out(tail):
                 break
             # a cut buys (end - cut) of label-stream headroom for the
             # grant, but the requeued tail re-pays the launch overhead and
@@ -461,6 +500,7 @@ class ServingEngine:
             self.pool.truncate_label(
                 gid, cut,
                 preempted_frames=sum(len(s.idxs) for s in tail))
+            note_requeue(tail)
             requeued[:0] = tail
         requeued.sort(key=lambda s: 0 if id(s) in members else 1)
         return requeued
@@ -560,26 +600,49 @@ class ServingEngine:
             deltas = train_many([self.sessions[c] for c in clients], ev.time)
         self.served += len(clients)
         legacy = self.cfg.streams.legacy
+        cost = self.pool.device(gid).cost
         t_free = ev.time
+
+        def charge_update(upd_s: float) -> None:
+            nonlocal t_free
+            if upd_s <= 0.0:
+                return
+            if legacy:
+                self.pool.extend_busy(gid, t_free, upd_s, self.cfg.duration)
+                t_free = t_free + upd_s
+            else:
+                _, t_free = self.pool.charge(gid, "train", t_free, upd_s)
+
+        # price the post-train update pipeline: a fused grant's selections
+        # and delta encodes ran as ONE stacked launch + ONE batched
+        # device->host encode (`core.batched`), so the device is charged the
+        # amortized `update_batch_s` once and every delta ships after it —
+        # not B serial select/compress round-trips
+        sent_bytes = [d.total_bytes for d in deltas if d is not None]
+        batched_update = self.cfg.fuse_updates and len(sent_bytes) > 1
+        if batched_update:
+            upd_s = cost.update_batch_s(sent_bytes)
+            if upd_s > 0.0:
+                # counters track *priced* amortization only — an unpriced
+                # pipeline charges nothing, so it reports nothing here
+                # (structural batching still shows in the stacked_* counts)
+                self.update_batched_launches += 1
+                self.update_batched_sessions += len(sent_bytes)
+                self.update_s_charged += upd_s
+                self.update_s_sequential += sum(cost.update_solo_s(b)
+                                                for b in sent_bytes)
+            charge_update(upd_s)
         for c, delta in zip(clients, deltas):
             s = self.sessions[c]
             if delta is not None:
                 # a real phase ran here (no-op grants don't record one);
                 # training phases always execute on the train stream
                 s.note_device(gid, "train")
-                comp_s = self.pool.device(gid).cost.delta_comp_s(
-                    delta.total_bytes)
-                if comp_s > 0.0:
-                    # the device stays busy compressing on its train stream;
-                    # the delta ships after (fused deltas compress
-                    # back-to-back)
-                    if legacy:
-                        self.pool.extend_busy(gid, t_free, comp_s,
-                                              self.cfg.duration)
-                        t_free = t_free + comp_s
-                    else:
-                        _, t_free = self.pool.charge(gid, "train", t_free,
-                                                     comp_s)
+                if not batched_update:
+                    upd_s = cost.update_solo_s(delta.total_bytes)
+                    self.update_s_charged += upd_s
+                    self.update_s_sequential += upd_s
+                    charge_update(upd_s)
                 arrival = s.net.send_down(t_free, delta.total_bytes)
                 self.q.push(arrival, "delta", c, (delta, t_free))
             if self.cfg.asr_ctrl_bytes > 0:
@@ -626,6 +689,7 @@ class ServingEngine:
     def run(self) -> dict:
         self._init_events()
         handlers = self._handlers
+        self._update_snap = update_pipeline_info()  # process-global counters
         t0 = time.time()
         while self.q:
             ev = self.q.pop()
@@ -664,6 +728,20 @@ class ServingEngine:
             "fused_launches": self.fused_launches,
             "fused_sessions": self.fused_sessions,
             "rider_grants": self.pool.rider_grants,
+            # fused post-train update pipeline (stacked select + batched
+            # encode): modeled pricing plus the real `core.batched` counters
+            # for this run (a stub fleet never enters the real fused math,
+            # so its stacked_* counters stay zero by construction)
+            "update_pipeline": {
+                "batched_launches": self.update_batched_launches,
+                "batched_sessions": self.update_batched_sessions,
+                "update_s_charged": self.update_s_charged,
+                "update_s_sequential": self.update_s_sequential,
+                "update_s_saved": (self.update_s_sequential
+                                   - self.update_s_charged),
+                **{k: v - getattr(self, "_update_snap", {}).get(k, v)
+                   for k, v in update_pipeline_info().items()},
+            },
             # pool telemetry
             "n_gpus": self.pool.n,
             "per_gpu_utilization": self.pool.utilization(cfg.duration),

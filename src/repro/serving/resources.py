@@ -66,6 +66,10 @@ class StreamModel:
     slowdown: float = 1.0  # overlap: duration stretch while both streams busy
     preempt: bool = False  # label launches splittable at frame-batch bounds
     preempt_cost_s: float = 0.0  # label-stream charge per real preemption
+    # priority aging: a frame batch requeued this many times becomes
+    # uncuttable — repeated preemption cannot push one victim's labels back
+    # forever, so label staleness is bounded by ~max_seg_preempts launches
+    max_seg_preempts: int = 2
 
     def __post_init__(self):
         if self.mode not in ("serialized", "overlap"):
@@ -77,6 +81,9 @@ class StreamModel:
                 f"slowdown is a stretch factor >= 1.0, got {self.slowdown}")
         if self.preempt_cost_s < 0.0:
             raise ValueError("preempt_cost_s must be >= 0")
+        if self.max_seg_preempts < 1:
+            raise ValueError(
+                f"max_seg_preempts must be >= 1, got {self.max_seg_preempts}")
 
     @property
     def legacy(self) -> bool:
@@ -193,6 +200,10 @@ class GPUDevice:
         default_factory=lambda: {s: 0.0 for s in STREAMS})
     charges: dict = field(
         default_factory=lambda: {s: [] for s in STREAMS})
+    # frame-batch completion boundaries of scheduled labeling launches —
+    # the points a preemption could cut the label stream at (`label_bounds`
+    # records them; `truncate_label` drops the ones a cut removed)
+    label_cuts: list = field(default_factory=list)
 
     # ---- stream telemetry ----------------------------------------------
     def stream_busy_s(self, stream: str, horizon_s: float) -> float:
@@ -293,11 +304,26 @@ class GPUPool:
         """Seconds after ``t`` before a train launch could begin on ``gid``
         under this stream model (policies use it for placement). Serialized
         streams wait for both clocks; overlapped only for the train stream.
-        Preemptability is ignored — this is the no-preempt upper bound."""
+
+        With ``preempt=True`` the label stream's contribution is bounded by
+        the next frame-batch boundary plus the preemption charge — a grant
+        would cut the in-flight labeling launch there rather than wait out
+        its tail — so preemptible devices are no longer taxed by the
+        no-preempt upper bound (`AffinityAware` reads this). The estimate is
+        deliberately optimistic about cuttability: the engine's disruption
+        guard and segment aging can refuse a specific cut, which placement
+        cannot know in advance."""
         dev = self.devices[gid]
         until = dev.stream_until["train"]
         if not self.streams.overlapped:
-            until = max(until, dev.stream_until["label"])
+            label_until = dev.stream_until["label"]
+            if self.streams.preempt and label_until > t:
+                dev.label_cuts = [b for b in dev.label_cuts if b > t]
+                if dev.label_cuts:
+                    label_until = min(
+                        label_until,
+                        min(dev.label_cuts) + self.streams.preempt_cost_s)
+            until = max(until, label_until)
         return max(0.0, until - t)
 
     def charge(self, gid: int, stream: str, t: float,
@@ -329,6 +355,15 @@ class GPUPool:
         start, _ = self.charge(gid, "label", t, cum_works[-1])
         snap = dev.charges["label"][-1].other_snap
         bounds = [self.streams.finish_time(start, w, snap) for w in cum_works]
+        if self.streams.preempt and not self.streams.overlapped:
+            # where a later grant could cut in — recorded only for the
+            # serialized+preempt model, the one config whose wait estimate
+            # reads them. Pruning happens HERE (drop bounds already past
+            # this launch's start), not only in the read path: a pool run
+            # under a policy that never queries the wait estimate must not
+            # accumulate the whole run's launch history
+            dev.label_cuts = ([b for b in dev.label_cuts if b > start]
+                              + bounds)
         return start, bounds
 
     def truncate_label(self, gid: int, new_end: float, *,
@@ -339,6 +374,7 @@ class GPUPool:
         not started yet (free reordering — no cost, not a preemption).
         Returns when the label stream is free again."""
         dev = self.devices[gid]
+        dev.label_cuts = [b for b in dev.label_cuts if b <= new_end]
         last = dev.charges["label"][-1]
         if cancel:
             dev.charges["label"].pop()

@@ -40,6 +40,7 @@ class SessionBase:
         self._outbox: list[int] = []  # sampled frame indices awaiting upload
         self.admitted = True
         self.state_bytes = 0  # server-side training state (migration cost)
+        self.delta_bytes_hint = 0  # expected wire-delta size (update pricing)
         self.ams_session = None  # real AMS core, if any (fused-training hook)
         self._edge_rate: float | None = None  # last *delivered* ASR rate
         # telemetry
@@ -95,6 +96,11 @@ class SegServingSession(SessionBase):
                           for x in jax.tree.leaves(params0))
         buffer_bytes = int(session.cfg.t_horizon) * self._n_pixels * 3 * 4
         self.state_bytes = 3 * param_bytes + buffer_bytes
+        # expected delta wire size, for amortized update-pipeline pricing at
+        # admission: γN fp16 values + the (uncompressed-bound) mask bits
+        n_params = sum(np.asarray(x).size for x in jax.tree.leaves(params0))
+        self.delta_bytes_hint = int(session.cfg.gamma * n_params * 2
+                                    + n_params / 8)
 
     # ---- edge side -----------------------------------------------------
     @property
@@ -185,6 +191,7 @@ class StubSession(SessionBase):
         self.dynamics = dynamics  # mIoU lost per second of weight staleness
         self._frame_bytes = frame_bytes
         self._delta_bytes = delta_bytes
+        self.delta_bytes_hint = delta_bytes  # stubs: the modeled size is exact
         self._ingested = 0
         self._last_update_t = 0.0
 

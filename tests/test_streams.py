@@ -470,3 +470,107 @@ def test_run_multiclient_streams_kwarg():
     assert r["stream_mode"] == "overlap"
     assert np.isfinite(r["mean_miou"])
     assert r["phases_served"] > 0
+
+
+# ---------------- preemptability-aware train_ready_wait_s ----------------
+
+
+def test_train_ready_wait_models_preemptability():
+    """A preemptible label launch no longer taxes placement with its full
+    tail: the modeled wait is bounded by the next frame-batch boundary plus
+    the preemption charge, while a no-preempt pool still reports the
+    serialized upper bound."""
+    def pool_with_launch(preempt):
+        pool = GPUPool(1, streams=StreamModel(preempt=preempt,
+                                              preempt_cost_s=0.1))
+        # one launch, frame batches completing at 1s/2s/6s of solo work
+        pool.label_bounds(0, 0.0, [1.0, 2.0, 6.0])
+        return pool
+
+    hard = pool_with_launch(False)
+    soft = pool_with_launch(True)
+    assert hard.train_ready_wait_s(0, 0.5) == pytest.approx(5.5)
+    # preemptible: cut at the 1.0 boundary, pay 0.1 -> ready at 1.1
+    assert soft.train_ready_wait_s(0, 0.5) == pytest.approx(0.6)
+    # between boundaries the next one gates (t=1.5 -> cut lands at 2.1)
+    assert soft.train_ready_wait_s(0, 1.5) == pytest.approx(0.6)
+    # past the last boundary there is nothing left to reclaim
+    assert soft.train_ready_wait_s(0, 6.5) == 0.0
+    # a raw charge (no recorded boundaries) keeps the upper bound
+    raw = GPUPool(1, streams=StreamModel(preempt=True))
+    raw.charge(0, "label", 0.0, 3.0)
+    assert raw.train_ready_wait_s(0, 1.0) == pytest.approx(2.0)
+    # truncation drops the boundaries the cut removed
+    cut = pool_with_launch(True)
+    cut.truncate_label(0, 2.0, preempted_frames=3)
+    assert all(b <= 2.0 for b in cut.devices[0].label_cuts)
+
+
+def test_affinity_prefers_preemptible_device():
+    """The stream-backlog tax now reflects preemptability: AffinityAware
+    steers toward a device whose labeling launch it could cut into (an
+    early frame-batch boundary bounds the wait) over one whose raw label
+    charge must be waited out — and without preemption the same layout
+    falls back to the tie-break (lowest device id)."""
+    def pool_with(preempt):
+        pool = GPUPool(2, streams=StreamModel(preempt=preempt,
+                                              preempt_cost_s=0.05))
+        pool.charge(0, "label", 0.0, 4.0)  # device 0: uncuttable charge
+        pool.label_bounds(1, 0.0, [0.5, 4.0])  # device 1: boundary at 0.5
+        return pool
+
+    p = make_policy("affinity")
+    # preemptible: device 1's wait is ~0.55, device 0's is 4.0 -> steer to 1
+    assert p.assign(0.0, [_req(0)], [0, 1], pool_with(True))[0].gpu == 1
+    # no preemption: both waits are 4.0; the tie-break picks device 0
+    assert p.assign(0.0, [_req(0)], [0, 1], pool_with(False))[0].gpu == 0
+
+
+# ---------------- priority aging on requeued segments ----------------
+
+
+def test_stream_model_max_seg_preempts_validation():
+    with pytest.raises(ValueError):
+        StreamModel(max_seg_preempts=0)
+    assert StreamModel().max_seg_preempts == 2
+
+
+def _preempt_scenario(ages):
+    """A fat foreign labeling launch mid-flight when a fresh grant lands;
+    ``ages`` presets the victim segments' requeue counts."""
+    from repro.serving.engine import _Backlog, _Segment
+    from repro.serving.policies import GPURequest as Req
+
+    link = LinkSpec(up_kbps=500.0, down_kbps=1000.0)
+    fleet = [StubSession(i, rate=1.0, net=ClientNetwork(link))
+             for i in range(2)]
+    eng = ServingEngine(
+        fleet, policy="fair",
+        cfg=ServingConfig(duration=60.0,
+                          streams=StreamModel("serialized", preempt=True,
+                                              preempt_cost_s=0.05)))
+    segs = [_Segment(client=1, idxs=list(range(40 + 10 * i)), preempts=age)
+            for i, age in enumerate(ages)]
+    eng._charge_label_launch(0, 0.0, segs)
+    backlog = _Backlog(req=Req(client=0, t_request=1.0, n_frames=4,
+                               k_iters=20, deadline=11.0, phi=1.0,
+                               t_update=10.0), idxs=[0, 1, 2, 3])
+    eng._start_service_streams(1.0, backlog, 0, [])
+    return eng, segs
+
+
+def test_fresh_segments_still_preempt_but_aged_do_not():
+    fresh_eng, _ = _preempt_scenario([0, 0, 0])
+    assert fresh_eng.pool.preemptions == 1
+    aged_eng, segs = _preempt_scenario([0, 2, 2])
+    # the tail that a cut would requeue contains twice-preempted batches:
+    # they are uncuttable, so the grant waits instead of splitting
+    assert aged_eng.pool.preemptions == 0
+    assert all(s.preempts == a for s, a in zip(segs, [0, 2, 2]))
+
+
+def test_requeued_segments_age():
+    eng, segs = _preempt_scenario([0, 0, 0])
+    requeued = [s for s in segs if s.preempts > 0]
+    assert requeued, "the cut tail should have aged"
+    assert all(s.preempts == 1 for s in requeued)

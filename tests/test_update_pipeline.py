@@ -1,0 +1,307 @@
+"""Fused post-train update pipeline: stacked gradient-guided selection,
+batched delta encode (byte-identical wire format), the amortized
+`GPUCostModel.update_batch_s` pricing, and the engine's batched-update
+charging + telemetry."""
+import gzip
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or a fallback when absent
+
+from repro.core import batched, delta as delta_mod, selection
+from repro.core.delta import encode_delta, encode_delta_stack
+from repro.core.scheduler import GPUCostModel
+from repro.serving import (
+    ClientNetwork,
+    LinkSpec,
+    ServingConfig,
+    ServingEngine,
+    StubSession,
+)
+
+
+def _tree(rng, sizes=((40, 8), (77,), (3, 5, 7))):
+    return {f"l{i}": jnp.asarray(rng.normal(size=s), jnp.float32)
+            for i, s in enumerate(sizes)}
+
+
+def _stub_fleet(n):
+    link = LinkSpec(up_kbps=500.0, down_kbps=1000.0)
+    return [StubSession(i, rate=0.15 if i < 2 else 1.0,
+                        dynamics=0.0005 if i < 2 else 0.004,
+                        net=ClientNetwork(link))
+            for i in range(n)]
+
+
+# ---------------- stacked selection ----------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 5), frac=st.floats(0.02, 0.6),
+       seed=st.integers(0, 1 << 16))
+def test_stacked_selection_matches_per_session(b, frac, seed):
+    """Session j's slice of the stacked launch equals
+    ``gradient_guided_mask(u_j, frac)`` within float32 tolerance: any
+    disagreeing coordinate sits within float32 noise of the γ-threshold."""
+    rng = np.random.default_rng(seed)
+    trees = [_tree(rng) for _ in range(b)]
+    stacked = selection.stacked_gradient_guided_masks(
+        batched.stack_trees(trees), frac)
+    for j, tree in enumerate(trees):
+        solo = selection.gradient_guided_mask(tree, frac)
+        thr = np.sort(np.abs(np.concatenate(
+            [np.ravel(l) for l in jax.tree.leaves(tree)])))
+        thr = thr[thr.size - max(int(frac * thr.size), 1)]
+        for (k, s_leaf), u_leaf in zip(
+                ((k, np.asarray(l[j])) for k, l in stacked.items()),
+                jax.tree.leaves(tree)):
+            solo_leaf = np.asarray(solo[k])
+            diff = s_leaf != solo_leaf
+            if diff.any():
+                near = np.abs(np.asarray(u_leaf))[diff]
+                assert np.all(np.abs(near - thr) < 1e-5 * (1.0 + thr))
+
+
+def test_stacked_selection_bisection_path(monkeypatch):
+    """Trees past the _SMALL cutoff take the vmapped bisection; per-session
+    thresholds match the solo bisection path's masks."""
+    monkeypatch.setattr(selection, "_SMALL", 100)
+    selection.stacked_cache_clear()
+    rng = np.random.default_rng(7)
+    trees = [_tree(rng, sizes=((300,), (150,))) for _ in range(3)]
+    stacked = selection.stacked_gradient_guided_masks(
+        batched.stack_trees(trees), 0.1)
+    for j, tree in enumerate(trees):
+        solo = selection.gradient_guided_mask(tree, 0.1)
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(stacked[k][j]),
+                                          np.asarray(solo[k]))
+
+
+def test_stacked_selection_cache_shared_across_calls():
+    selection.stacked_cache_clear()
+    rng = np.random.default_rng(0)
+    stack = batched.stack_trees([_tree(rng) for _ in range(4)])
+    selection.stacked_gradient_guided_masks(stack, 0.05)
+    assert selection.stacked_cache_info() == {"size": 1, "hits": 0,
+                                              "misses": 1}
+    selection.stacked_gradient_guided_masks(stack, 0.05)
+    assert selection.stacked_cache_info() == {"size": 1, "hits": 1,
+                                              "misses": 1}
+    # a different γ (or shape) is a different executable
+    selection.stacked_gradient_guided_masks(stack, 0.2)
+    assert selection.stacked_cache_info()["size"] == 2
+
+
+def test_stacked_selection_fraction_per_session():
+    rng = np.random.default_rng(3)
+    stack = batched.stack_trees([_tree(rng) for _ in range(3)])
+    masks = selection.stacked_gradient_guided_masks(stack, 0.1)
+    for j in range(3):
+        sel = sum(int(np.asarray(l[j]).sum()) for l in jax.tree.leaves(masks))
+        n = sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(masks))
+        assert sel / n == pytest.approx(0.1, rel=0.15, abs=0.02)
+
+
+# ---------------- batched delta encode ----------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 6), frac=st.floats(0.0, 1.0),
+       seed=st.integers(0, 1 << 16))
+def test_encode_delta_stack_byte_identical(b, frac, seed):
+    """The golden: every delta out of the batched device->host encode must
+    match the per-session `encode_delta` byte for byte — values, the gzip'd
+    bit-vector, and all wire accounting."""
+    rng = np.random.default_rng(seed)
+    params = [_tree(rng) for _ in range(b)]
+    masks = [jax.tree.map(
+        lambda x: jnp.asarray(rng.uniform(size=x.shape) < frac), p)
+        for p in params]
+    stacked = encode_delta_stack(batched.stack_trees(params),
+                                 batched.stack_trees(masks), b)
+    for p, m, got in zip(params, masks, stacked):
+        ref = encode_delta(p, m)
+        np.testing.assert_array_equal(got.values, ref.values)
+        assert got.values.dtype == ref.values.dtype
+        assert got.packed_mask == ref.packed_mask
+        assert got.n_total == ref.n_total
+        assert got.value_bytes == ref.value_bytes
+        assert got.mask_bytes == ref.mask_bytes
+        assert got.total_bytes == ref.total_bytes
+
+
+def test_encode_delta_stack_cache_and_fp32():
+    delta_mod.stack_cache_clear()
+    rng = np.random.default_rng(1)
+    params = [_tree(rng) for _ in range(3)]
+    masks = [jax.tree.map(
+        lambda x: jnp.asarray(rng.uniform(size=x.shape) < 0.3), p)
+        for p in params]
+    ps, ms = batched.stack_trees(params), batched.stack_trees(masks)
+    encode_delta_stack(ps, ms, 3)
+    assert delta_mod.stack_cache_info() == {"size": 1, "hits": 0,
+                                            "misses": 1}
+    encode_delta_stack(ps, ms, 3)
+    assert delta_mod.stack_cache_info()["hits"] == 1
+    # a float32 wire format is a different executable and still byte-exact
+    got = encode_delta_stack(ps, ms, 3, value_dtype="float32")
+    assert delta_mod.stack_cache_info()["size"] == 2
+    for p, m, g in zip(params, masks, got):
+        ref = encode_delta(p, m, value_dtype="float32")
+        np.testing.assert_array_equal(g.values, ref.values)
+        assert g.packed_mask == ref.packed_mask
+
+
+def test_mask_scratch_keyed_by_dtype_interleaved():
+    """Regression for the scratch keying: two same-sized trees encoded at
+    different wire dtypes, interleaved, must each round-trip their own
+    values — the (n_total, value_dtype) key keeps their scratch buffers
+    (and any future value scratch) from aliasing."""
+    rng = np.random.default_rng(9)
+    a, b = _tree(rng, sizes=((64,),)), _tree(rng, sizes=((64,),))
+    ma = {"l0": jnp.asarray(np.arange(64) % 3 == 0)}
+    mb = {"l0": jnp.asarray(np.arange(64) % 2 == 0)}
+    d16a = encode_delta(a, ma, value_dtype="float16")
+    d32b = encode_delta(b, mb, value_dtype="float32")
+    d16a2 = encode_delta(a, ma, value_dtype="float16")  # interleaved re-run
+    assert d16a.packed_mask == d16a2.packed_mask
+    np.testing.assert_array_equal(d16a.values, d16a2.values)
+    np.testing.assert_array_equal(
+        d32b.values, np.asarray(b["l0"])[np.asarray(mb["l0"])])
+    bits = np.unpackbits(np.frombuffer(
+        gzip.decompress(d32b.packed_mask), np.uint8))[:64]
+    np.testing.assert_array_equal(bits.astype(bool), np.asarray(mb["l0"]))
+    assert (64, "float16") in delta_mod._MASK_SCRATCH
+    assert (64, "float32") in delta_mod._MASK_SCRATCH
+
+
+# ---------------- fused pipeline through train_phases_fused ----------------
+
+
+def _seg_sessions(n, k_iters=2):
+    from repro.core.server import AMSConfig, AMSSession, Task
+    from repro.data.video import VideoConfig
+    from repro.models.seg.student import SegConfig, make_student
+    from repro.sim.seg_world import SegWorld, phi_pixel_loss
+
+    seg = SegConfig(n_classes=5)
+    ams = AMSConfig(t_update=8.0, t_horizon=30.0, k_iters=k_iters,
+                    batch_size=2, gamma=0.05, lr=2e-3, phi_target=0.15)
+    pre = make_student(seg, jax.random.PRNGKey(0))
+    out = []
+    for i in range(n):
+        world = SegWorld.make(
+            VideoConfig(seed=100 + i, height=24, width=24, fps=2.0,
+                        duration=20.0), seg)
+        task = Task(loss_and_grad=world.loss_and_grad, teacher=None,
+                    phi_loss=phi_pixel_loss)
+        s = AMSSession(task, ams, jax.tree.map(lambda x: x, pre), seed=i)
+        frames = np.stack([world.video.frame(j)[0] for j in range(6)])
+        labels = np.stack([world.teacher.label(j) for j in range(6)])
+        s.receive_labeled(frames, labels, 5.0)
+        out.append(s)
+    return out
+
+
+def test_train_phases_fused_batches_select_and_encode():
+    sessions = _seg_sessions(3)
+    batched.update_pipeline_reset()
+    # phase 1: no u_prev yet -> random masks, but the encode still batches
+    d1 = batched.train_phases_fused(sessions, 6.0, force_stack=True)
+    assert all(d is not None for d in d1)
+    info = batched.update_pipeline_info()
+    assert info["stacked_select_launches"] == 0  # first phase: random masks
+    assert info["stacked_encode_launches"] == 1
+    assert info["stacked_encode_sessions"] == 3
+    # phase 2: every member defers its gradient-guided selection into ONE
+    # stacked launch
+    d2 = batched.train_phases_fused(sessions, 14.0, force_stack=True)
+    assert all(d is not None for d in d2)
+    info = batched.update_pipeline_info()
+    assert info["stacked_select_launches"] == 1
+    assert info["stacked_select_sessions"] == 3
+    assert info["stacked_encode_launches"] == 2
+    assert all(s.phase == 2 for s in sessions)
+    # deltas carry the right wire dtype and decode cleanly
+    assert all(d.value_dtype == "float16" for d in d2)
+
+
+def test_fused_singleton_still_bitwise_with_deferred_selection():
+    """The deferred-selection refactor must not perturb the B=1 sequential
+    path: two identical sessions, one trained solo and one through the
+    fused entry point, stay bit-identical across TWO phases (the second
+    exercises the deferred gradient-guided materialization)."""
+    a, = _seg_sessions(1)
+    b, = _seg_sessions(1)
+    for t in (6.0, 14.0):
+        da = a.train_phase(t)
+        [db] = batched.train_phases_fused([b], t)
+        assert np.array_equal(da.values, db.values)
+        assert da.packed_mask == db.packed_mask
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------- cost model ----------------
+
+
+def test_update_batch_s_solo_exact_sublinear_and_free_when_unpriced():
+    c = GPUCostModel(select_s=0.1, delta_comp_s_per_mb=5.0)
+    nb = 200_000  # 0.2 MB -> 1.0 s comp + 0.1 s select
+    assert c.update_solo_s(nb) == pytest.approx(1.1)
+    # B=1 is EXACTLY the solo cost (unfused engines bit-identical)
+    assert c.update_batch_s([nb]) == c.update_solo_s(nb)
+    for b in range(2, 9):
+        fused = c.update_batch_s([nb] * b)
+        assert fused < b * c.update_solo_s(nb)  # sublinear in B
+        assert fused > c.update_batch_s([nb] * (b - 1))  # but monotone
+    # an unpriced pipeline stays free: no setup charge materializes
+    free = GPUCostModel()
+    assert free.update_batch_s([nb] * 4) == 0.0
+    assert free.update_batch_s([]) == 0.0
+    assert c.update_batch_s([]) == 0.0
+
+
+# ---------------- engine integration ----------------
+
+
+def _run_engine(n, *, fuse_train, fuse_updates, cost, duration=120.0):
+    eng = ServingEngine(
+        _stub_fleet(n), policy="fair", cost=cost,
+        cfg=ServingConfig(duration=duration, max_queue=32,
+                          fuse_train=fuse_train, fuse_updates=fuse_updates))
+    return eng.run()
+
+
+def test_engine_prices_fused_updates_amortized():
+    cost = GPUCostModel(select_s=0.15, delta_comp_s_per_mb=5.0)
+    seq = _run_engine(10, fuse_train=4, fuse_updates=False, cost=cost)
+    bat = _run_engine(10, fuse_train=4, fuse_updates=True, cost=cost)
+    up_seq, up_bat = seq["update_pipeline"], bat["update_pipeline"]
+    assert up_seq["batched_launches"] == 0
+    assert up_seq["update_s_saved"] == 0.0
+    assert up_seq["update_s_charged"] > 0.0
+    assert bat["fused_launches"] > 0
+    assert up_bat["batched_launches"] > 0
+    assert up_bat["batched_sessions"] > up_bat["batched_launches"]
+    assert up_bat["update_s_saved"] > 0.0
+    assert (up_bat["update_s_charged"]
+            < up_bat["update_s_sequential"])
+    # the reclaimed device time turns into served phases or freshness
+    assert (bat["phases_served"], bat["mean_miou"]) >= (
+        seq["phases_served"], seq["mean_miou"])
+
+
+def test_engine_update_pipeline_free_by_default():
+    """Default cost model: the update path is unpriced, so the batched
+    pricing is a structural no-op (goldens elsewhere prove bit-identity;
+    this pins the telemetry contract)."""
+    r = _run_engine(6, fuse_train=4, fuse_updates=True, cost=GPUCostModel())
+    up = r["update_pipeline"]
+    assert up["update_s_charged"] == 0.0 and up["update_s_saved"] == 0.0
+    assert up["stacked_select_launches"] == 0  # stub fleet: no real math
+    r1 = _run_engine(6, fuse_train=1, fuse_updates=True, cost=GPUCostModel())
+    assert r1["update_pipeline"]["batched_launches"] == 0

@@ -24,10 +24,16 @@ sequential; ``--smoke --overlap`` asserts the dual-stream device model
 (label/train stream overlap + preemptible labeling, `serving.StreamModel`)
 sustains STRICTLY more sessions on one fused GPU than the serialized
 single-clock baseline at the same mIoU target, and records preemption +
-per-stream utilization telemetry.
+per-stream utilization telemetry; ``--smoke --trace out.json`` is the
+flight-recorder gate — it asserts a traced fused dual-stream run emits
+byte-identical, schema-valid Chrome trace JSON (grant/train/select/encode
+spans, counter tracks, nesting + concurrency invariants) without
+perturbing the schedule, then runs the modeled-vs-measured cost-model
+drift audit on the real fused math (``observability`` section of
+BENCH_serving.json).
 
 Run: PYTHONPATH=src python -m benchmarks.serving_scale [--smoke]
-     [--gpus 4] [--fused] [--overlap]
+     [--gpus 4] [--fused] [--overlap] [--trace out.json]
 """
 from __future__ import annotations
 
@@ -71,13 +77,14 @@ def run_fleet(n: int, *, n_gpus: int = 1, policy: str = "fair",
               duration: float = 240.0, max_queue: int = 32,
               fuse_train: int = 1, streams: StreamModel | None = None,
               cost: GPUCostModel | None = None,
-              fuse_updates: bool = True) -> dict:
+              fuse_updates: bool = True, tracer=None) -> dict:
     engine = ServingEngine(
         make_stub_fleet(n), policy=policy, cost=cost or GPUCostModel(),
         cfg=ServingConfig(duration=duration, max_queue=max_queue,
                           n_gpus=n_gpus, fuse_train=fuse_train,
                           fuse_updates=fuse_updates,
-                          streams=streams or StreamModel()))
+                          streams=streams or StreamModel()),
+        tracer=tracer)
     return engine.run()
 
 
@@ -338,6 +345,107 @@ def run_overlap_sweep(fuse: int = 4, *, counts=(10, 12, 14, 16, 18, 20),
     return bench["dual_stream"]
 
 
+def run_trace_probe(trace_path: str, *, n: int = 8,
+                    duration: float = 120.0) -> dict:
+    """Flight-recorder gate: trace a fused dual-stream fleet twice and
+    assert the Chrome trace JSON is byte-identical, schema-valid
+    (`serving.validate_trace`: required counter tracks, non-negative
+    durations, per-stream serial execution, concurrency bounds, grant
+    nesting) and carries the full grant/train/select/encode span
+    vocabulary; a serialized run must validate too, and tracing must not
+    perturb the schedule (traced == untraced results). Writes the overlap
+    trace to ``trace_path``."""
+    from repro.serving import Tracer, validate_trace
+
+    cost = GPUCostModel(select_s=0.15, delta_comp_s_per_mb=5.0)
+    overlap = StreamModel(mode="overlap", slowdown=1.1, preempt=True,
+                          preempt_cost_s=0.02)
+
+    def traced(streams):
+        tracer = Tracer()
+        r = run_fleet(n, n_gpus=2, duration=duration, fuse_train=4,
+                      streams=streams, cost=cost, tracer=tracer)
+        return r, tracer.to_json()
+
+    r1, j1 = traced(overlap)
+    _, j2 = traced(overlap)
+    assert j1 == j2, "trace not byte-identical across identical runs"
+    trace = json.loads(j1)
+    problems = validate_trace(trace)
+    assert not problems, f"trace schema violations: {problems[:5]}"
+    names = {e.get("name") for e in trace["traceEvents"]}
+    for want in ("grant", "train", "select", "encode", "label_batch",
+                 "delta", "frames"):
+        assert want in names, f"trace missing {want!r} spans"
+    _, js = traced(StreamModel())  # serialized: concurrency limit 1
+    problems = validate_trace(json.loads(js))
+    assert not problems, f"serialized trace violations: {problems[:5]}"
+    # the recorder must be an observer: same schedule with tracing off
+    r0 = run_fleet(n, n_gpus=2, duration=duration, fuse_train=4,
+                   streams=overlap, cost=cost)
+    drop = ("wall_s", "events_per_sec", "events_per_sec_steady",
+            "observability")
+    assert ({k: v for k, v in r0.items() if k not in drop}
+            == {k: v for k, v in r1.items() if k not in drop}), (
+        "tracing changed the simulated schedule")
+    with open(trace_path, "w") as f:
+        f.write(j1)
+    print(f"wrote {trace_path} ({len(trace['traceEvents'])} events) — "
+          f"open at https://ui.perfetto.dev")
+    return trace
+
+
+def run_drift_probe(n_sessions: int = 4, k_iters: int = 4,
+                    size: int = 16) -> dict:
+    """Modeled-vs-measured cost audit on the REAL fused math: run a small
+    seg fleet through `train_phases_fused` (force_stack) twice — first
+    launch compiles, second is steady state — and fold the `core.timing`
+    stage stats against `GPUCostModel`'s pricing (`serving.drift_report`,
+    summarized by `roofline.analysis.serving_stage_report`). Updates the
+    ``observability`` section of BENCH_serving.json."""
+    from benchmarks.kernels_bench import _update_fleet
+    from repro.core import timing
+    from repro.core.batched import train_phases_fused
+    from repro.roofline.analysis import serving_stage_report
+    from repro.serving import drift_report
+
+    # the priced update pipeline from run_update_sweep, so select/encode
+    # have a nonzero model to audit against
+    cost = GPUCostModel(select_s=0.15, delta_comp_s_per_mb=5.0)
+    timing.set_enabled(True)
+    sessions = _update_fleet(n_sessions, k_iters, size)
+    snap = timing.snapshot()
+    with Timer() as t:
+        train_phases_fused(sessions, 16.0, force_stack=True)  # first launch
+        train_phases_fused(sessions, 26.0, force_stack=True)  # steady state
+    stats = timing.delta(snap)
+    drift = drift_report(cost, stats)
+    report = serving_stage_report(drift)
+    assert report["measured_total_s"] > 0.0, "no stage timings recorded"
+    for stage in ("train_fused", "select_stacked", "encode_stacked"):
+        assert stage in report["stages"], f"stage {stage!r} not measured"
+    emit(f"serving_scale.drift.b{n_sessions}.k{k_iters}", t.us,
+         f"bottleneck={report['bottleneck']};"
+         f"measured_total_s={report['measured_total_s']:.4f};"
+         f"compile_s={timing.compile_s(stats):.2f}")
+    bench = {
+        "observability": {
+            "n_sessions": n_sessions,
+            "k_iters": k_iters,
+            "cost": {"select_s": cost.select_s,
+                     "delta_comp_s_per_mb": cost.delta_comp_s_per_mb,
+                     "train_iter_s": cost.train_iter_s,
+                     "train_batch_setup_s": cost.train_batch_setup_s,
+                     "train_batch_discount": cost.train_batch_discount},
+            "compile_s": timing.compile_s(stats),
+            "drift": {stage: dict(e) for stage, e in drift.items()},
+            "stage_report": report,
+        }
+    }
+    _write_bench(bench)
+    return bench["observability"]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -360,8 +468,23 @@ def main() -> None:
                          "select+encode pricing vs per-session charges, "
                          "plus the real-math byte-identical wall-clock "
                          "compare")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="flight-recorder gate: trace a fused dual-stream "
+                         "fleet, assert byte-identical + schema-valid "
+                         "Chrome trace JSON (written to PATH), and run the "
+                         "modeled-vs-measured drift audit on the real "
+                         "fused math")
     ap.add_argument("--duration", type=float, default=None)
     args = ap.parse_args()
+    if args.smoke and args.trace:
+        trace = run_trace_probe(args.trace)
+        ob = run_drift_probe()
+        print(f"serving_scale trace smoke OK "
+              f"({len(trace['traceEvents'])} trace events; drift bottleneck "
+              f"{ob['stage_report']['bottleneck']}, "
+              f"compile {ob['compile_s']:.1f}s)")
+        print("serving_scale smoke OK")
+        return
     if args.smoke and args.update_pipeline:
         ub = run_update_sweep()
         seq = ub["sessions_sustained_1gpu"]["per_session"]

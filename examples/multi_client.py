@@ -3,12 +3,18 @@ event-driven serving runtime: pick a GPU policy and a link profile and watch
 per-client accuracy, bandwidth, and delta staleness.
 
 Run:  PYTHONPATH=src python examples/multi_client.py --clients 4 --policy gain
+
+Flight recorder: add ``--trace out.json`` to record every grant, labeling
+launch, train phase and client transfer as spans in simulated time, then
+open the file at https://ui.perfetto.dev ("Open trace file") to see the
+schedule — one track per GPU stream, one per client link, counter tracks
+for queue depth / backlog / stream utilization.
 """
 import argparse
 
 from repro.core.server import AMSConfig
 from repro.models.seg.student import SegConfig
-from repro.serving import LinkSpec, StreamModel
+from repro.serving import LinkSpec, StreamModel, Tracer
 from repro.sim.multiclient import run_multiclient
 from repro.sim.seg_world import pretrain_student
 
@@ -37,6 +43,9 @@ def main():
                          "boundaries (works with or without --overlap)")
     ap.add_argument("--up-kbps", type=float, default=1000.0)
     ap.add_argument("--down-kbps", type=float, default=2000.0)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome trace-event JSON of the run "
+                         "(open at https://ui.perfetto.dev)")
     args = ap.parse_args()
 
     seg_cfg = SegConfig(n_classes=5)
@@ -50,12 +59,18 @@ def main():
             mode="overlap" if args.overlap else "serialized",
             slowdown=args.slowdown if args.overlap else 1.0,
             preempt=args.preempt, preempt_cost_s=0.02)
+    tracer = Tracer() if args.trace else None
     out = run_multiclient(args.clients, pre, seg_cfg, ams, duration=args.duration,
                           video_kw=dict(height=48, width=48, fps=4.0),
                           policy=args.policy, n_gpus=args.gpus,
                           affinity=args.affinity, fuse_train=args.fuse_train,
                           streams=streams,
-                          link=LinkSpec(up_kbps=args.up_kbps, down_kbps=args.down_kbps))
+                          link=LinkSpec(up_kbps=args.up_kbps, down_kbps=args.down_kbps),
+                          tracer=tracer)
+    if tracer is not None:
+        tracer.dump(args.trace)
+        print(f"trace: {args.trace} — open at https://ui.perfetto.dev "
+              f"('Open trace file')")
     print(f"clients={out['n_clients']} policy={out['scheduler']} "
           f"gpus={out['n_gpus']} "
           f"mean mIoU={out['mean_miou']:.3f} gpu_util={out['gpu_utilization']:.2f} "

@@ -12,6 +12,22 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Environment hygiene (the discipline the exemplar JAX serving setups use):
+# silence the TF/XLA C++ log spew that drowns the gate's own output, and
+# prefer tcmalloc when it is actually present — glibc malloc fragments the
+# long-lived benchmark processes, but an unconditional LD_PRELOAD breaks
+# every subprocess on hosts without it.
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+if [ -z "${LD_PRELOAD:-}" ]; then
+    for _tcm in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+                /usr/lib/libtcmalloc.so.4; do
+        if [ -f "$_tcm" ]; then
+            export LD_PRELOAD="$_tcm"
+            break
+        fi
+    done
+fi
+
 echo "== tier-1 gate: pytest (minus known env-red modules) =="
 python -m pytest -q \
     --ignore=tests/test_dryrun_small.py \
@@ -55,6 +71,18 @@ echo "== dual-stream smoke: benchmarks.serving_scale --smoke --overlap =="
 python -m benchmarks.serving_scale --smoke --overlap
 overlap_smoke=$?
 
-echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke, update smoke exit=$update_smoke, overlap smoke exit=$overlap_smoke"
-[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && [ "$update_smoke" -eq 0 ] && [ "$overlap_smoke" -eq 0 ] && echo "CI OK"
-exit $((tier1 | smoke | pool_smoke | fused_smoke | update_smoke | overlap_smoke))
+echo "== flight-recorder smoke: benchmarks.serving_scale --smoke --trace =="
+# asserts a traced fused dual-stream run emits byte-identical, schema-valid
+# Chrome trace JSON (required counter tracks, non-negative durations,
+# per-stream serial execution, cross-stream concurrency bounds, grant
+# nesting) without perturbing the schedule, then runs the modeled-vs-
+# measured cost-model drift audit on the real fused math; writes the trace
+# artifact and the observability section of BENCH_serving.json
+trace_out="$(mktemp -t serving_trace.XXXXXX.json)"
+python -m benchmarks.serving_scale --smoke --trace "$trace_out"
+trace_smoke=$?
+rm -f "$trace_out"
+
+echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke, update smoke exit=$update_smoke, overlap smoke exit=$overlap_smoke, trace smoke exit=$trace_smoke"
+[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && [ "$update_smoke" -eq 0 ] && [ "$overlap_smoke" -eq 0 ] && [ "$trace_smoke" -eq 0 ] && echo "CI OK"
+exit $((tier1 | smoke | pool_smoke | fused_smoke | update_smoke | overlap_smoke | trace_smoke))

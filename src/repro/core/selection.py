@@ -14,11 +14,14 @@ from __future__ import annotations
 
 import functools
 import math
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import timing
 
 
 def tree_size(tree) -> int:
@@ -80,9 +83,22 @@ def gradient_guided_mask(u_tree, frac: float):
     Small pytrees: exact global top-k threshold via one sort. Large pytrees
     (sharded, up to 4e11 params): bisection over per-leaf counts — no concat,
     no sort, log2(range) all-reduce-sized passes."""
-    if tree_size(u_tree) <= _SMALL:
-        return _mask_small(u_tree, frac)
-    return _mask_large(u_tree, frac)
+    body = _mask_small if tree_size(u_tree) <= _SMALL else _mask_large
+    if not timing.enabled():
+        return body(u_tree, frac)
+    key = _stack_key(u_tree, frac)
+    first = key not in _SOLO_SEEN
+    _SOLO_SEEN.add(key)
+    t0 = time.perf_counter()
+    out = body(u_tree, frac)
+    timing.block(out)
+    timing.record("select_solo", time.perf_counter() - t0, first=first)
+    return out
+
+
+# shapes already selected on, so the first jit compile of a solo selection
+# (per shape/γ) is attributed to the compile bucket, not steady-state
+_SOLO_SEEN: set = set()
 
 
 # ---------------------------------------------------------------------------
@@ -164,7 +180,8 @@ def stacked_gradient_guided_masks(u_stacked, frac: float):
     per_session = sum(int(np.prod(l.shape[1:])) for l in leaves)
     key = _stack_key(u_stacked, frac)
     fn = _STACK_CACHE.get(key)
-    if fn is None:
+    first = fn is None
+    if first:
         _STACK_MISSES += 1
         body = (_bitwise_topk_body if per_session <= _SMALL
                 else _mask_large_body)
@@ -172,7 +189,14 @@ def stacked_gradient_guided_masks(u_stacked, frac: float):
         _STACK_CACHE[key] = fn
     else:
         _STACK_HITS += 1
-    return fn(u_stacked)
+    if not timing.enabled():
+        return fn(u_stacked)
+    t0 = time.perf_counter()
+    out = fn(u_stacked)
+    timing.block(out)
+    timing.record("select_stacked", time.perf_counter() - t0, first=first,
+                  key=(int(leaves[0].shape[0]),))
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -169,3 +169,32 @@ def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
         "bottleneck": max(terms, key=terms.get),
         "step_time_lb_s": max(terms.values()),
     }
+
+
+def serving_stage_report(drift: dict) -> dict:
+    """Roofline-style summary of the serving pipeline's *measured* stage
+    timings, consuming a `repro.serving.obs.drift_report` dict.
+
+    Where `roofline_terms` ranks analytic lower bounds, this ranks the
+    stages the fused serving path actually ran (steady-state wall-clock,
+    compile excluded) and reports each stage's model efficiency — modeled
+    seconds / measured seconds, the fraction of `GPUCostModel`'s price the
+    real stacked executables achieve. ``bottleneck`` is the stage eating
+    the most measured steady time; a low ``model_efficiency`` there is
+    where re-pricing (or a faster kernel) pays first."""
+    stages = {}
+    for stage, e in sorted(drift.items()):
+        meas, mod = e["measured_steady_s"], e["modeled_steady_s"]
+        stages[stage] = {
+            "measured_s": meas,
+            "modeled_s": mod,
+            "compile_s": e["compile_s"],
+            "calls": e["calls"],
+            "model_efficiency": (mod / meas) if meas > 0 else None,
+        }
+    measured = {k: v["measured_s"] for k, v in stages.items()}
+    return {
+        "stages": stages,
+        "bottleneck": (max(measured, key=measured.get) if measured else None),
+        "measured_total_s": sum(measured.values()),
+    }

@@ -48,10 +48,33 @@ Quickstart::
 ``n_gpus``/``affinity`` kwargs; the defaults reproduce the single-GPU PR-1
 runs bit-for-bit), and `benchmarks/serving_scale.py` drives it with
 `StubSession`s to measure sustained sessions per GPU at large client counts.
+
+Flight recorder (`serving.obs`): pass ``tracer=obs.Tracer()`` to the engine
+(or ``run_multiclient``, or ``examples/multi_client.py --trace out.json``)
+and every grant, migration, labeling launch, preemption cut, fused
+train→select→encode stage and per-client uplink/downlink transfer lands as
+a span in **simulated** time. ``tracer.dump("out.json")`` writes
+deterministic Chrome trace-event JSON — open it at https://ui.perfetto.dev
+("Open trace file"; processes are the server, each ``gpu<g>`` with
+``stream:label``/``stream:train``/``grants`` threads, and each
+``client<i>``; counter tracks carry queue depth, labeling backlog and
+per-stream utilization). The engine's results dict is assembled from
+`obs.MetricsRegistry`, an ``observability`` section reports the
+modeled-vs-measured cost audit (`obs.drift_report` over `core.timing`
+stage stats), and `obs.debug_snapshot` unifies the fused-path cache /
+counter introspection hooks. Tracing defaults off and the recorder never
+changes the schedule: two runs, traced or not, pop identical events.
 """
 from repro.serving.engine import ServingConfig, ServingEngine
 from repro.serving.events import Event, EventQueue
 from repro.serving.network import ClientNetwork, Link, LinkSpec
+from repro.serving.obs import (
+    MetricsRegistry,
+    Tracer,
+    debug_snapshot,
+    drift_report,
+    validate_trace,
+)
 from repro.serving.policies import (
     POLICIES,
     AffinityAware,
@@ -83,4 +106,6 @@ __all__ = [
     "make_policy", "GPUDevice", "GPUPool", "MigrationModel", "StreamModel",
     "SegServingSession", "SessionBase", "StubSession", "train_many",
     "ServingConfig", "ServingEngine",
+    "Tracer", "MetricsRegistry", "debug_snapshot", "drift_report",
+    "validate_trace",
 ]

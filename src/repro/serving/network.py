@@ -60,14 +60,31 @@ class ClientNetwork:
     def __post_init__(self):
         self.up = Link(self.spec.up_kbps, self.spec.prop_delay_s)
         self.down = Link(self.spec.down_kbps, self.spec.prop_delay_s)
+        # flight recorder wiring (set by the engine when tracing): the span
+        # covers link occupancy [start, busy_until]; propagation delay is
+        # in-flight time, not link time, so it stays outside the span
+        self.tracer = None
+        self.client = -1
+        self.last_span = None  # most recent transfer span (flow anchoring)
+
+    def _traced_transfer(self, link: Link, direction: str, t_now: float,
+                         nbytes: int, what: str) -> float:
+        if self.tracer is None:
+            return link.transfer(t_now, nbytes)
+        start = max(t_now, link.busy_until)
+        arrival = link.transfer(t_now, nbytes)
+        self.last_span = self.tracer.client_span(
+            self.client, direction, what, start, link.busy_until,
+            {"bytes": int(nbytes)})
+        return arrival
 
     def send_up(self, t_now: float, nbytes: int, what: str = "frames") -> float:
         self.ledger.uplink(nbytes, t_now, what)
-        return self.up.transfer(t_now, nbytes)
+        return self._traced_transfer(self.up, "up", t_now, nbytes, what)
 
     def send_down(self, t_now: float, nbytes: int, what: str = "delta") -> float:
         self.ledger.downlink(nbytes, t_now, what)
-        return self.down.transfer(t_now, nbytes)
+        return self._traced_transfer(self.down, "down", t_now, nbytes, what)
 
     def send_ctrl(self, t_now: float, nbytes: int) -> float:
         """The ASR rate-control message: a few bytes, but they queue behind

@@ -149,6 +149,7 @@ class _Charge:
     start: float
     end: float
     other_snap: float  # other stream's busy-until at launch time
+    span: object = None  # flight-recorder span, when a tracer is attached
 
     @property
     def overlap_s(self) -> float:
@@ -250,6 +251,7 @@ class GPUPool:
         self.devices = [GPUDevice(gid=g, cost=c) for g, c in enumerate(costs)]
         self.migration = migration or MigrationModel()
         self.streams = streams or StreamModel()
+        self.tracer = None  # flight recorder (serving.obs.Tracer), optional
         self.residency_cap = residency_cap
         self._home: dict[int, int] = {}  # client -> device holding its state
         self._last_grant: dict[int, dict[int, float]] = {
@@ -326,13 +328,16 @@ class GPUPool:
             until = max(until, label_until)
         return max(0.0, until - t)
 
-    def charge(self, gid: int, stream: str, t: float,
-               work_s: float) -> tuple[float, float]:
+    def charge(self, gid: int, stream: str, t: float, work_s: float,
+               name: str | None = None,
+               args: dict | None = None) -> tuple[float, float]:
         """Occupy ``stream`` on ``gid`` for ``work_s`` seconds of solo-rate
         work, starting no earlier than ``t``: the item queues behind the
         stream (and, when serialized, behind the other stream too) and is
         stretched by the overlap model while the other stream is busy.
-        Returns the placed ``(start, end)``."""
+        Returns the placed ``(start, end)``. With a tracer attached and a
+        ``name`` given, the charge carries a flight-recorder span (later
+        truncation edits the span with the schedule)."""
         dev = self.devices[gid]
         other = "train" if stream == "label" else "label"
         start = max(t, dev.stream_until[stream])
@@ -340,19 +345,23 @@ class GPUPool:
             start = max(start, dev.stream_until[other])
         snap = dev.stream_until[other]
         end = self.streams.finish_time(start, work_s, snap)
-        dev.charges[stream].append(_Charge(start=start, end=end,
-                                           other_snap=snap))
+        c = _Charge(start=start, end=end, other_snap=snap)
+        if self.tracer is not None and name is not None:
+            c.span = self.tracer.gpu_span(gid, stream, name, start, end, args)
+        dev.charges[stream].append(c)
         dev.stream_until[stream] = end
         return start, end
 
-    def label_bounds(self, gid: int, t: float,
-                     cum_works: list[float]) -> tuple[float, list[float]]:
+    def label_bounds(self, gid: int, t: float, cum_works: list[float],
+                     name: str | None = None,
+                     args: dict | None = None) -> tuple[float, list[float]]:
         """Charge one labeling launch whose frame batches complete at the
         cumulative solo-rate work marks ``cum_works`` (monotone, last =
         total). Returns ``(start, [absolute boundary times])`` — the points
         the launch may later be preempted at."""
         dev = self.devices[gid]
-        start, _ = self.charge(gid, "label", t, cum_works[-1])
+        start, _ = self.charge(gid, "label", t, cum_works[-1],
+                               name=name, args=args)
         snap = dev.charges["label"][-1].other_snap
         bounds = [self.streams.finish_time(start, w, snap) for w in cum_works]
         if self.streams.preempt and not self.streams.overlapped:
@@ -378,16 +387,30 @@ class GPUPool:
         last = dev.charges["label"][-1]
         if cancel:
             dev.charges["label"].pop()
+            if last.span is not None:
+                last.span.cancelled = True
         else:
             last.end = new_end
+            if last.span is not None:
+                # a preemption is a schedule edit, so it is a span edit
+                last.span.end = new_end
+                if last.span.args is not None:
+                    last.span.args = dict(last.span.args, preempted=True)
             self.preemptions += 1
             self.preempted_frames += preempted_frames
+            if self.tracer is not None:
+                self.tracer.gpu_instant(gid, "label", "preempt", new_end,
+                                        {"frames": int(preempted_frames)})
             cost = self.streams.preempt_cost_s
             if cost > 0.0:
                 self.preempt_s_total += cost
-                dev.charges["label"].append(_Charge(
-                    start=new_end, end=new_end + cost,
-                    other_snap=dev.stream_until["train"]))
+                c = _Charge(start=new_end, end=new_end + cost,
+                            other_snap=dev.stream_until["train"])
+                if self.tracer is not None:
+                    c.span = self.tracer.gpu_span(
+                        gid, "label", "preempt_cost", new_end,
+                        new_end + cost, {"frames": int(preempted_frames)})
+                dev.charges["label"].append(c)
                 new_end = new_end + cost
         dev.stream_until["label"] = (dev.charges["label"][-1].end
                                      if dev.charges["label"] else 0.0)

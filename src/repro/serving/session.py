@@ -37,6 +37,7 @@ class SessionBase:
     def __init__(self, idx: int, net: ClientNetwork | None = None):
         self.idx = idx
         self.net = net or ClientNetwork(LinkSpec())
+        self.net.client = idx  # flight-recorder identity for transfer spans
         self._outbox: list[int] = []  # sampled frame indices awaiting upload
         self.admitted = True
         self.state_bytes = 0  # server-side training state (migration cost)

@@ -84,6 +84,7 @@ def run_multiclient(
     streams: StreamModel | None = None,
     link: LinkSpec | None = None,
     serving_cfg: ServingConfig | None = None,
+    tracer=None,
 ) -> dict:
     """Returns mean mIoU across clients + scheduler/network telemetry.
 
@@ -103,6 +104,11 @@ def run_multiclient(
     training, optionally preempting labeling launches at frame-batch
     boundaries) — the defaults (one GPU, unfused, serialized streams, no
     preemption) keep PR-1/PR-2/PR-3 results bit-identical.
+
+    ``tracer`` attaches a `repro.serving.Tracer` flight recorder: every
+    grant/labeling/train/transfer lands as a span in simulated time; dump
+    with ``tracer.dump("out.json")`` and open in Perfetto. ``tracer=None``
+    (the default) records nothing and changes nothing.
 
     The ``duration`` kwarg governs the run: it sizes the videos AND the
     engine horizon. A ``serving_cfg`` supplies the other engine knobs
@@ -132,5 +138,6 @@ def run_multiclient(
             fuse_train=(serving_cfg.fuse_train if fuse_train is None
                         else fuse_train),
             streams=(serving_cfg.streams if streams is None else streams))
-    engine = ServingEngine(sessions, policy=policy, cost=cost, cfg=cfg)
+    engine = ServingEngine(sessions, policy=policy, cost=cost, cfg=cfg,
+                           tracer=tracer)
     return engine.run()

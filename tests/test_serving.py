@@ -221,7 +221,8 @@ def test_engine_deterministic():
         r = ServingEngine(_stub_fleet(5), policy="gain",
                           cfg=ServingConfig(duration=90.0)).run()
         return {k: v for k, v in r.items()
-                if k not in ("wall_s", "events_per_sec")}
+                if k not in ("wall_s", "events_per_sec",
+                             "events_per_sec_steady")}
 
     assert once() == once()
 

@@ -156,6 +156,201 @@ def _update_fleet(n_sessions: int, k_iters: int, size: int):
     return out
 
 
+def _f16_ulp_diff(a, b) -> int:
+    """Max ULP distance between two float16 arrays (0 = byte-identical)."""
+    def lex(x):
+        u = np.asarray(x, np.float16).reshape(-1).view(np.uint16).astype(np.int32)
+        return np.where(u >= 0x8000, 0x8000 - u, u)  # monotone in value
+    la, lb = lex(a), lex(b)
+    return int(np.max(np.abs(la - lb))) if la.size else 0
+
+
+def kernel_equivalence_gate(n_sessions: int = 4, k_iters: int = 3,
+                            size: int = 24) -> dict:
+    """Serving-level XLA-vs-Pallas contract, asserted on the REAL fused
+    path: identical twin seg fleets run two fused phases under
+    ``kernel_mode("xla")`` and ``kernel_mode("pallas")``; the streamed
+    wire deltas must carry byte-identical packed masks (selection is an
+    exact integer search in both engines) and fp16 values within 1 ULP
+    (the residue of XLA:CPU's context-dependent FMA contraction, which
+    makes even the XLA path differ jit-vs-nojit — see
+    `core.batched._build_phase_fn`)."""
+    from repro.core import batched, kernel_dispatch, selection
+
+    def run_mode(kern):
+        batched.cache_clear()
+        selection.stacked_cache_clear()
+        kernel_dispatch.reset()
+        batched.set_kernel_mode(kern)
+        try:
+            ss = _update_fleet(n_sessions, k_iters, size)
+            r1 = batched.train_phases_fused(ss, 8.0, force_stack=True)
+            r2 = batched.train_phases_fused(ss, 12.0, force_stack=True)
+        finally:
+            batched.set_kernel_mode("xla")
+        return r1 + r2
+
+    dx, dp = run_mode("xla"), run_mode("pallas")
+    masks_ok = all(a.packed_mask == b.packed_mask for a, b in zip(dx, dp))
+    assert masks_ok, "pallas kernel changed a streamed wire mask"
+    max_ulp = max(_f16_ulp_diff(a.values, b.values) for a, b in zip(dx, dp))
+    assert max_ulp <= 1, (
+        f"pallas wire-delta values drifted {max_ulp} f16 ULP (>1) from XLA")
+    n_identical = sum(np.array_equal(np.asarray(a.values),
+                                     np.asarray(b.values))
+                      for a, b in zip(dx, dp))
+    emit(f"kernels.gate.equivalence.n{n_sessions}", 0.0,
+         f"deltas={len(dx)};masks_byte_identical={masks_ok};"
+         f"values_max_ulp={max_ulp};values_identical={n_identical}/{len(dx)}")
+    return {"n_deltas": len(dx), "masks_byte_identical": bool(masks_ok),
+            "values_max_f16_ulp": max_ulp,
+            "values_byte_identical": int(n_identical)}
+
+
+def kernel_roofline_compare(b: int = 4, n: int = 1 << 16) -> dict:
+    """Standalone stacked-kernel timings vs their analytic HBM bounds.
+
+    Times the fused Pallas masked-Adam and bit-pattern top-k against their
+    XLA references on a synthetic B-stacked tree, reports each engine's
+    achieved fraction of the memory roofline
+    (`roofline.analysis.kernel_roofline_fraction` over
+    `adam_step_hbm_bytes` / `topk_hbm_bytes`), and asserts the top-k masks
+    are byte-identical. Interpret-mode wall-clock is not the TPU story —
+    the fractions quantify the structural bytes story either way."""
+    import functools
+    import math
+
+    from repro.core import selection
+    from repro.core.batched import stack_trees
+    from repro.core.masked_adam import init_state, masked_adam_update
+    from repro.kernels.masked_adam.ops import masked_adam_stacked
+    from repro.kernels.topk_mask import stacked_topk_masks
+    from repro.roofline import analysis
+
+    rng = np.random.default_rng(7)
+
+    def one_tree():
+        return {"w": jnp.asarray(rng.normal(size=(n - 300,)), jnp.float32),
+                "b": jnp.asarray(rng.normal(size=(300,)), jnp.float32)}
+
+    trees = [one_tree() for _ in range(b)]
+    grads = [one_tree() for _ in range(b)]
+    masks = [jax.tree.map(lambda l: jnp.asarray(
+        rng.integers(0, 2, l.shape), bool), t) for t in trees]
+    p = stack_trees(trees)
+    g = stack_trees(grads)
+    m = stack_trees(masks)
+    st = stack_trees([init_state(t) for t in trees])
+
+    xla_adam = jax.jit(jax.vmap(lambda p_, g_, s_, m_: masked_adam_update(
+        p_, g_, s_, m_)))
+    pal_adam = jax.jit(functools.partial(masked_adam_stacked,
+                                         lr=1e-3, b1=0.9, b2=0.999, eps=1e-8))
+    reps = 3
+    out = {}
+    adam_nbytes = b * analysis.adam_step_hbm_bytes(n)
+    times = {}
+    for name, fn in (("xla", xla_adam), ("pallas", pal_adam)):
+        jax.block_until_ready(jax.tree.leaves(fn(p, g, st, m))[0])  # warm
+        with Timer() as t:
+            for _ in range(reps):
+                o = fn(p, g, st, m)
+            jax.block_until_ready(jax.tree.leaves(o)[0])
+        times[name] = t.s / reps
+    out["adam"] = {
+        "b": b, "n_per_session": n, "nbytes": adam_nbytes,
+        "xla_s": times["xla"], "pallas_s": times["pallas"],
+        "ratio": times["pallas"] / max(times["xla"], 1e-12),
+        "roofline_fraction_xla": analysis.kernel_roofline_fraction(
+            adam_nbytes, times["xla"]),
+        "roofline_fraction_pallas": analysis.kernel_roofline_fraction(
+            adam_nbytes, times["pallas"]),
+    }
+
+    u = stack_trees([one_tree() for _ in range(b)])
+    frac = 0.05
+    xla_topk = jax.jit(jax.vmap(functools.partial(
+        selection._bitwise_topk_body, frac=frac)))
+    mx = xla_topk(u)
+    mp = stacked_topk_masks(u, frac=frac)
+    identical = all(np.array_equal(np.asarray(a), np.asarray(c))
+                    for a, c in zip(jax.tree.leaves(mx), jax.tree.leaves(mp)))
+    assert identical, "pallas top-k masks differ from the XLA counting search"
+    times = {}
+    for name, fn in (("xla", xla_topk),
+                     ("pallas", lambda t_: stacked_topk_masks(t_, frac=frac))):
+        jax.block_until_ready(jax.tree.leaves(fn(u))[0])  # warm
+        with Timer() as t:
+            for _ in range(reps):
+                o = fn(u)
+            jax.block_until_ready(jax.tree.leaves(o)[0])
+        times[name] = t.s / reps
+    out["topk"] = {
+        "b": b, "n_per_session": n, "frac": frac,
+        "masks_byte_identical": bool(identical),
+        "nbytes_pallas": b * analysis.topk_hbm_bytes(n, passes=1),
+        "nbytes_xla": b * analysis.topk_hbm_bytes(n, passes=32),
+        "xla_s": times["xla"], "pallas_s": times["pallas"],
+        "ratio": times["pallas"] / max(times["xla"], 1e-12),
+        "roofline_fraction_xla": analysis.kernel_roofline_fraction(
+            b * analysis.topk_hbm_bytes(n, passes=32), times["xla"]),
+        "roofline_fraction_pallas": analysis.kernel_roofline_fraction(
+            b * analysis.topk_hbm_bytes(n, passes=1), times["pallas"]),
+    }
+    for group in ("adam", "topk"):
+        for field in ("roofline_fraction_xla", "roofline_fraction_pallas"):
+            v = out[group][field]
+            assert v is not None and math.isfinite(v) and v > 0, (
+                f"{group}.{field} not a finite positive fraction: {v!r}")
+        emit(f"kernels.gate.{group}.pallas", out[group]["pallas_s"] * 1e6,
+             f"roofline_fraction={out[group]['roofline_fraction_pallas']:.3e};"
+             f"ratio_vs_xla={out[group]['ratio']:.3f}")
+    return out
+
+
+def run_kernel_gate(quick: bool = True) -> dict:
+    """The ``scripts/ci.sh --kernels`` gate: serving-level XLA-vs-Pallas
+    equivalence + kernel roofline fractions + an auto-mode race, merged
+    into the ``observability.kernels`` section of BENCH_serving.json (and
+    re-read to assert the roofline-fraction fields landed finite)."""
+    import math
+
+    from benchmarks import serving_scale
+    from repro.core import batched, kernel_dispatch, selection
+
+    results = {"equivalence": kernel_equivalence_gate(
+        n_sessions=2 if quick else 4, k_iters=2 if quick else 3,
+        size=16 if quick else 24)}
+    results.update(kernel_roofline_compare(b=2 if quick else 4,
+                                           n=1 << (14 if quick else 16)))
+    # demonstrate the dispatch race: auto mode settles select_stacked once
+    kernel_dispatch.reset()
+    selection.stacked_cache_clear()
+    batched.set_kernel_mode("auto")
+    try:
+        rng = np.random.default_rng(11)
+        u = {"w": jnp.asarray(rng.normal(size=(2, 4096)), jnp.float32)}
+        selection.stacked_gradient_guided_masks(u, 0.05)
+    finally:
+        batched.set_kernel_mode("xla")
+    results["dispatch"] = kernel_dispatch.kernel_dispatch_info()
+    assert results["dispatch"]["auto_races"], "auto race recorded no decision"
+
+    # merge under observability.kernels without clobbering the drift audit
+    bench = serving_scale._read_bench()
+    obs = bench.get("observability") or {}
+    obs["kernels"] = results
+    serving_scale._write_bench({"observability": obs})
+    written = serving_scale._read_bench()["observability"]["kernels"]
+    for group in ("adam", "topk"):
+        for field in ("roofline_fraction_xla", "roofline_fraction_pallas"):
+            v = written[group][field]
+            assert isinstance(v, float) and math.isfinite(v), (
+                f"BENCH_serving.json observability.kernels.{group}.{field} "
+                f"is not finite: {v!r}")
+    return results
+
+
 def run(quick: bool = True):
     n = 1 << 18
     rng = np.random.default_rng(0)
@@ -219,4 +414,9 @@ def run(quick: bool = True):
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    if "--kernels" in sys.argv[1:]:
+        run_kernel_gate(quick="--full" not in sys.argv[1:])
+    else:
+        run()

@@ -109,17 +109,22 @@ def sessions_sustained(n_gpus: int, *, policy: str = "fair",
     return best, per_count
 
 
+def _read_bench() -> dict:
+    """Current BENCH_serving.json contents ({} if absent or unparsable)."""
+    if os.path.exists(BENCH_PATH):
+        try:
+            with open(BENCH_PATH) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError):
+            pass
+    return {}
+
+
 def _write_bench(update: dict) -> None:
     """Merge ``update`` into BENCH_serving.json (the pool sweep and the
     fused-training sweep each own different keys; neither clobbers the
     other's section)."""
-    bench = {}
-    if os.path.exists(BENCH_PATH):
-        try:
-            with open(BENCH_PATH) as f:
-                bench = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            bench = {}
+    bench = _read_bench()
     bench.update(update)
     with open(BENCH_PATH, "w") as f:
         json.dump(bench, f, indent=2, sort_keys=True)
@@ -442,6 +447,11 @@ def run_drift_probe(n_sessions: int = 4, k_iters: int = 4,
             "stage_report": report,
         }
     }
+    # the kernel gate (`kernels_bench --kernels`) owns observability.kernels;
+    # top-level merge would clobber it, so carry it forward
+    kernels = (_read_bench().get("observability") or {}).get("kernels")
+    if kernels is not None:
+        bench["observability"]["kernels"] = kernels
     _write_bench(bench)
     return bench["observability"]
 

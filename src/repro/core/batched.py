@@ -42,8 +42,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import selection, timing
+from repro.core import kernel_dispatch, selection, timing
 from repro.core.delta import encode_delta_stack
+from repro.core.kernel_dispatch import kernel_dispatch_info, set_kernel_mode
 from repro.core.masked_adam import masked_adam_update, momentum_update
 
 # ---------------------------------------------------------------------------
@@ -135,7 +136,8 @@ def cache_clear() -> None:
 
 
 def _build_phase_fn(loss_and_grad, optimizer: str, lr: float, b1: float,
-                    b2: float, eps: float, momentum: float, mode: str):
+                    b2: float, eps: float, momentum: float, mode: str,
+                    kernel: str = "xla"):
     """The fused executable: K iterations of a vmapped step.
 
     Signature: ``(params, opt_state, mask, frames, labels)`` where every tree
@@ -144,6 +146,20 @@ def _build_phase_fn(loss_and_grad, optimizer: str, lr: float, b1: float,
     loss_last)`` with ``loss_last`` of shape (B,). ``mode="scan"`` compiles
     the whole phase into one launch; ``mode="loop"`` compiles the step once
     and dispatches it K times (see module docstring for why CPU wants this).
+
+    ``kernel="pallas"`` (adam only) swaps the per-leaf tree_map optimizer
+    for the fused Pallas kernel: the loss/grad stays a plain ``jax.vmap``,
+    but the masked-Adam step runs as one `pl.pallas_call` per param dtype
+    over flattened-and-concatenated ``(B, rows, 128)`` buffers — the
+    session axis is a kernel grid dimension, and p/g/m/v/mask stream
+    through VMEM exactly once per iteration
+    (`repro.kernels.masked_adam.ops.masked_adam_stacked`). The unstack is
+    bit-exact; the arithmetic agrees with the XLA path to float32 rounding
+    (XLA's context-dependent FMA contraction can move single ULPs — the
+    same caveat as scan-vs-loop, and it makes even the XLA path differ
+    jit-vs-nojit), so the downstream selection masks and packed wire masks
+    are byte-identical and the fp16 delta values agree to 1 ULP —
+    CI-asserted (`scripts/ci.sh --kernels`).
     """
 
     def step(p, st, m, f, l):
@@ -156,7 +172,18 @@ def _build_phase_fn(loss_and_grad, optimizer: str, lr: float, b1: float,
                                        lr=lr, momentum=momentum)
         return p, st, u, loss
 
-    vstep = jax.vmap(step)
+    if kernel == "pallas" and optimizer == "adam":
+        from repro.kernels.masked_adam.ops import masked_adam_stacked
+
+        vgrad = jax.vmap(lambda p, f, l: loss_and_grad(p, f, l))
+
+        def vstep(p, st, m, f, l):
+            loss, grads = vgrad(p, f, l)
+            p, st, u = masked_adam_stacked(p, grads, st, m,
+                                           lr=lr, b1=b1, b2=b2, eps=eps)
+            return p, st, u, loss
+    else:
+        vstep = jax.vmap(step)
 
     if mode == "loop":
         jstep = jax.jit(vstep)
@@ -191,6 +218,20 @@ def _block(tree) -> None:
         getattr(leaf, "block_until_ready", lambda: None)()
 
 
+def _resolved_kernel(optimizer: str, base_key) -> str | None:
+    """The kernel implementation the cached executable should embed:
+    ``xla`` | ``pallas``, or None when ``kernel_mode("auto")`` has not yet
+    raced this (backend, compile key). Non-adam optimizers have no Pallas
+    implementation and always resolve to ``xla``."""
+    if optimizer != "adam":
+        return "xla"
+    km = kernel_dispatch.kernel_mode()
+    if km != "auto":
+        return km
+    return kernel_dispatch.auto_winner("train_fused", jax.default_backend(),
+                                       base_key)
+
+
 def fused_phase_fn(loss_and_grad, *, struct: Hashable, k_iters: int,
                    optimizer: str, lr: float, b1: float, b2: float,
                    eps: float, momentum: float):
@@ -201,59 +242,99 @@ def fused_phase_fn(loss_and_grad, *, struct: Hashable, k_iters: int,
     shape-dtype struct, K, and the optimizer recipe: N same-shaped sessions
     cost one compile, not N.
 
-    In ``auto`` mode the first call for an undecided key returns a one-shot
-    *racer*: invoked on the first real stacked batch it builds both the
-    scan- and loop-shaped executables, times one warmed execution of each,
-    records the winner in `_AUTO_MODES` (see `auto_mode_info`), caches the
-    winning executable, and returns its output — so every later call is a
-    plain cache hit on measured evidence rather than a backend-name guess.
-    The loser is discarded uncounted; the race is one cache miss."""
+    Two independent axes settle ``auto`` decisions by one-shot timed races
+    on the first real stacked batch, each recorded per (backend, compile
+    key):
+
+    * exec mode (``set_exec_mode``): scan-vs-loop, as before — the racer
+      builds both executables, times one warmed execution of each, records
+      the winner in `_AUTO_MODES` and caches its executable.
+    * kernel mode (``set_kernel_mode``): XLA tree_map vs the fused Pallas
+      masked-Adam, raced only AFTER the exec shape is settled (the exec
+      race runs with the XLA kernel, so a default ``kernel_mode("xla")``
+      process is bit-identical to the pre-dispatch code). The winner lands
+      in `core.kernel_dispatch` (see `kernel_dispatch_info`).
+
+    Each race is one cache miss; losers are discarded uncounted."""
     global _HITS, _MISSES
     base_key = (loss_and_grad, struct, k_iters, optimizer, lr, b1, b2, eps,
                 momentum)
+    backend = jax.default_backend()
     if _EXEC_MODE != "auto":
         mode = _EXEC_MODE
     else:
-        mode = _AUTO_MODES.get((jax.default_backend(), base_key))
-    if mode is not None:
-        key = base_key + (mode,)
+        mode = _AUTO_MODES.get((backend, base_key))
+    kern = _resolved_kernel(optimizer, base_key)
+    if mode is not None and kern is not None:
+        key = base_key + (mode, kern)
         fn = _PHASE_CACHE.get(key)
         if fn is None:
             _MISSES += 1
             fn = _build_phase_fn(loss_and_grad, optimizer, lr, b1, b2, eps,
-                                 momentum, mode)
+                                 momentum, mode, kern)
             _PHASE_CACHE[key] = fn
         else:
             _HITS += 1
         return fn
     _MISSES += 1
 
-    def race(params, opt_state, mask, frames, labels):
-        auto_key = (jax.default_backend(), base_key)
+    def _timed_best(fn, args):
+        _block(fn(*args))  # compile + warm, excluded from the clock
+        best, out = float("inf"), None
+        for _ in range(2):  # best-of-2: damp scheduler/GC jitter
+            t0 = time.perf_counter()
+            out = fn(*args)
+            _block(out)
+            best = min(best, time.perf_counter() - t0)
+        return best, out
+
+    if mode is None:
+        # exec-shape race (kernel pinned: resolved if decided, else the
+        # XLA reference — so the exec decision never depends on an
+        # unraced kernel axis)
+        kern0 = kern if kern is not None else "xla"
+
+        def race(params, opt_state, mask, frames, labels):
+            args = (params, opt_state, mask, frames, labels)
+            outs, times = {}, {}
+            for m in ("loop", "scan"):
+                fn = _build_phase_fn(loss_and_grad, optimizer, lr, b1, b2,
+                                     eps, momentum, m, kern0)
+                times[m], out = _timed_best(fn, args)
+                outs[m] = (fn, out)
+            # ties break lexically ("loop"); note the race is wall-clock —
+            # a near-tie can resolve differently across processes, and the
+            # two shapes agree only to float32 tolerance (forced modes, or
+            # a pre-warmed cache, give bit-stable numerics when needed)
+            winner = min(times, key=lambda m: (times[m], m))
+            _AUTO_MODES[(backend, base_key)] = winner
+            _PHASE_CACHE[base_key + (winner, kern0)] = outs[winner][0]
+            return outs[winner][1]
+
+        return race
+
+    def krace(params, opt_state, mask, frames, labels):
+        # XLA-vs-Pallas race at the settled exec shape. Both paths produce
+        # byte-identical selection masks and wire masks (CI-asserted); the
+        # fp16 delta values agree to 1 ULP — the residue of XLA:CPU's
+        # context-dependent FMA contraction, which makes even the XLA
+        # reference differ jit-vs-nojit (see `_build_phase_fn`).
         args = (params, opt_state, mask, frames, labels)
         outs, times = {}, {}
-        for m in ("loop", "scan"):
-            fn = _build_phase_fn(loss_and_grad, optimizer, lr, b1, b2, eps,
-                                 momentum, m)
-            _block(fn(*args))  # compile + warm, excluded from the clock
-            best = float("inf")
-            for _ in range(2):  # best-of-2: damp scheduler/GC jitter
-                t0 = time.perf_counter()
-                out = fn(*args)
-                _block(out)
-                best = min(best, time.perf_counter() - t0)
-            times[m] = best
-            outs[m] = (fn, out)
-        # ties break lexically ("loop"); note the race is wall-clock — a
-        # near-tie can resolve differently across processes, and the two
-        # shapes agree only to float32 tolerance (forced modes, or a
-        # pre-warmed cache, give bit-stable numerics when that matters)
-        winner = min(times, key=lambda m: (times[m], m))
-        _AUTO_MODES[auto_key] = winner
-        _PHASE_CACHE[base_key + (winner,)] = outs[winner][0]
+        for kn in ("xla", "pallas"):
+            fn = _PHASE_CACHE.get(base_key + (mode, kn))
+            if fn is None:
+                fn = _build_phase_fn(loss_and_grad, optimizer, lr, b1, b2,
+                                     eps, momentum, mode, kn)
+            times[kn], out = _timed_best(fn, args)
+            outs[kn] = (fn, out)
+        winner = min(times, key=lambda kn: (times[kn], kn))
+        kernel_dispatch.record_auto("train_fused", backend, base_key,
+                                    winner, times)
+        _PHASE_CACHE[base_key + (mode, winner)] = outs[winner][0]
         return outs[winner][1]
 
-    return race
+    return krace
 
 
 # ---------------------------------------------------------------------------
@@ -392,9 +473,14 @@ def train_phases_fused(sessions: list, t_now: float,
             t0 = time.perf_counter()
             params, opt, u, losses = phase(params, opt, mask, frames, labels)
             timing.block((params, opt, u, losses))
+            # nbytes: analytic optimizer-update traffic only (the
+            # masked-Adam roofline term — forward/backward excluded),
+            # B x K x `roofline.analysis.adam_step_hbm_bytes`
             timing.record("train_fused", time.perf_counter() - t0,
                           first=_MISSES > miss0,
-                          key=(len(members), s0.cfg.k_iters))
+                          key=(len(members), s0.cfg.k_iters),
+                          nbytes=(len(members) * s0.cfg.k_iters * 33
+                                  * selection.tree_size(s0.params)))
         else:
             params, opt, u, losses = phase(params, opt, mask, frames, labels)
         losses = np.asarray(losses)

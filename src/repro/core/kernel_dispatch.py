@@ -1,0 +1,99 @@
+"""Kernel dispatch for the serving hot path: XLA vs Pallas, raced or forced.
+
+The fused grant lifecycle has two stages hot enough to justify hand-written
+kernels — the masked-Adam inner update (pure HBM-bandwidth, ~36 bytes per
+parameter per iteration) and the bit-pattern top-k threshold search behind
+gradient-guided selection (32 counting passes that a kernel collapses into
+ONE HBM read). Both now exist as Pallas implementations
+(`repro.kernels.masked_adam.ops.masked_adam_stacked`,
+`repro.kernels.topk_mask`), and this module is the switch that decides,
+per call site, which implementation the cached executables embed:
+
+* ``"xla"`` (the default) — the tree_map / counting-loop implementations
+  every prior PR shipped. Bit-identical to PR 6, golden-tested.
+* ``"pallas"`` — the Pallas kernels. Selection masks and packed wire
+  masks stay byte-identical to the XLA path (the top-k threshold search
+  is exact integer counting in both engines) and the fp16 wire-delta
+  values agree to 1 ULP — the residue of XLA:CPU's context-dependent FMA
+  contraction, which makes even the XLA reference differ jit-vs-nojit
+  (both CI-asserted by ``scripts/ci.sh --kernels``). On a real
+  accelerator they trade the multi-pass XLA lowering for single-HBM-pass
+  kernels.
+* ``"auto"`` — the same discipline as `core.batched.set_exec_mode`'s
+  scan-vs-loop race: the first call for a (backend, compile key) builds
+  both implementations, times one warmed execution of each on the caller's
+  real batch, records the winner here, and every later call is a plain
+  cache hit on measured evidence. Because the masks agree byte-for-byte,
+  the race carries no adaptivity wobble — only ULP-level float residue
+  and the wall-clock of the winning executable change.
+
+State is process-global like the executable caches it steers; the serving
+engine is single-threaded by construction. `kernel_dispatch_info` feeds
+`serving.obs.debug_snapshot`.
+"""
+from __future__ import annotations
+
+KERNEL_MODES = ("auto", "pallas", "xla")
+
+_MODE = "xla"
+# measured auto winners: (site, backend, compile key) -> {"winner", "times"}
+# where site names the call site ("train_fused" | "topk") and the compile
+# key is the same hashable struct key the site's executable cache uses.
+_AUTO: dict = {}
+
+
+def set_kernel_mode(mode: str) -> None:
+    """Select the hot-path kernel implementation: ``xla`` (default,
+    bit-identical to the pre-kernel path), ``pallas``, or ``auto`` (first
+    call per (backend, compile key) races both and keeps the measured
+    winner). Decided races survive a mode flip away and back."""
+    if mode not in KERNEL_MODES:
+        raise ValueError(f"kernel mode must be auto|pallas|xla, got {mode!r}")
+    global _MODE
+    _MODE = mode
+
+
+def kernel_mode() -> str:
+    return _MODE
+
+
+def auto_winner(site: str, backend: str, key) -> str | None:
+    """The recorded race winner for a call site's compile key, or None if
+    this (backend, key) has not raced yet."""
+    e = _AUTO.get((site, backend, key))
+    return e["winner"] if e else None
+
+
+def record_auto(site: str, backend: str, key, winner: str,
+                times: dict) -> None:
+    """Record a finished XLA-vs-Pallas race (measured best-of wall-clock
+    per implementation, in seconds)."""
+    _AUTO[(site, backend, key)] = {"winner": winner,
+                                   "times": {k: float(v)
+                                             for k, v in times.items()}}
+
+
+def auto_info() -> dict:
+    """The raw race table (hashable compile keys as-is) — tests."""
+    return {k: dict(v) for k, v in _AUTO.items()}
+
+
+def kernel_dispatch_info() -> dict:
+    """JSON-friendly summary for `obs.debug_snapshot` / benchmarks: the
+    forced mode plus every auto race decision, keyed by
+    ``site:backend:<8-digit key hash>`` (compile keys are unhashable into
+    JSON directly — same digest convention as ``auto_exec_modes``)."""
+    return {
+        "mode": _MODE,
+        "auto_races": {
+            f"{site}:{backend}:{abs(hash(key)) % 10**8:08d}": dict(e)
+            for (site, backend, key), e in _AUTO.items()
+        },
+    }
+
+
+def reset() -> None:
+    """Back to defaults: mode ``xla``, race table cleared (tests)."""
+    global _MODE
+    _MODE = "xla"
+    _AUTO.clear()

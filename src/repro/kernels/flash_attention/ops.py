@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention_4d
 
 
@@ -14,9 +15,12 @@ from repro.kernels.flash_attention.flash_attention import flash_attention_4d
     jax.jit, static_argnames=("causal", "window", "softcap", "block_q", "block_k", "interpret")
 )
 def flash_attention_pallas(q, k, v, *, causal=True, window=0, softcap=0.0,
-                           block_q=128, block_k=128, interpret=True):
+                           block_q=128, block_k=128, interpret=None):
     """q: (B,Sq,KV,G,hd); k,v: (B,Skv,KV,hd) — same layout as
-    models/attention.flash_attention. Returns (B,Sq,KV,G,hd)."""
+    models/attention.flash_attention. Returns (B,Sq,KV,G,hd).
+    ``interpret=None`` resolves per backend
+    (`repro.kernels.interpret_default`)."""
+    interpret = resolve_interpret(interpret)
     B, Sq, KV, G, hd = q.shape
     q4 = q.transpose(0, 2, 3, 1, 4).reshape(B, KV * G, Sq, hd)
     k4 = k.transpose(0, 2, 1, 3)

@@ -59,3 +59,36 @@ def masked_adam_2d(p, g, m, v, b, bc, *, b1: float, b2: float, eps: float,
         out_shape=out_shapes,
         interpret=interpret,
     )(p, g, m, v, b, bc)
+
+
+def masked_adam_stacked_3d(p, g, m, v, b, bc, *, b1: float, b2: float,
+                           eps: float, block_rows: int = BLOCK_ROWS,
+                           interpret: bool = True):
+    """Stacked-layout call for a fused grant: all tensors (B, R, 128) with
+    the vmapped session axis as the leading GRID dimension, bc (B, 1) f32
+    per-session bias correction (sessions in one stack can sit at different
+    Adam step counts). One ``pallas_call`` covers the whole group: grid
+    (B, R/br), each step streaming a (1, br, 128) tile of p/g/m/v/mask
+    through VMEM exactly once — the same single-HBM-pass math as
+    `masked_adam_2d`, without a per-session dispatch loop."""
+    B, R, _ = p.shape
+    br = min(block_rows, R)
+    while R % br:
+        br -= 1
+    grid = (B, R // br)
+    tile = pl.BlockSpec((1, br, LANES), lambda s, i: (s, i, 0))
+    scal = pl.BlockSpec((1, 1), lambda s, i: (s, 0))
+    out_shapes = (
+        jax.ShapeDtypeStruct(p.shape, p.dtype),
+        jax.ShapeDtypeStruct(m.shape, m.dtype),
+        jax.ShapeDtypeStruct(v.shape, v.dtype),
+        jax.ShapeDtypeStruct(p.shape, jnp.float32),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, b1=b1, b2=b2, eps=eps),
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, tile, scal],
+        out_specs=(tile, tile, tile, tile),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(p, g, m, v, b, bc)

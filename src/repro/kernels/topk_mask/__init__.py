@@ -1,0 +1,7 @@
+from repro.kernels.topk_mask.ops import (pallas_topk_supported,
+                                         stacked_topk_masks)
+from repro.kernels.topk_mask.topk_mask import (PALLAS_TOPK_MAX_PER_SESSION,
+                                               topk_threshold_bits_3d)
+
+__all__ = ["stacked_topk_masks", "pallas_topk_supported",
+           "topk_threshold_bits_3d", "PALLAS_TOPK_MAX_PER_SESSION"]

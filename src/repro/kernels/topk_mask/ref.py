@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the bit-pattern top-k kernel: the same 32 unrolled
+counting passes, as XLA ops (this is exactly the implementation
+`core.selection._bitwise_topk_body` derives its threshold from — kept here
+so the kernel's test oracle does not depend on the serving stack)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def topk_threshold_bits_ref(u_leaves, k: int) -> jax.Array:
+    """Threshold bits for ONE session: the bit pattern of the exact value
+    ``sort(|u|)[N-k]`` over the concatenated leaves."""
+    bits = [jax.lax.bitcast_convert_type(
+        jnp.abs(l.astype(jnp.float32)).reshape(-1), jnp.uint32)
+        for l in u_leaves]
+    thr = jnp.uint32(0)
+    for bit in range(31, -1, -1):
+        cand = thr | jnp.uint32(1 << bit)
+        cnt = sum(jnp.sum(b >= cand) for b in bits)
+        thr = jnp.where(cnt >= k, cand, thr)
+    return thr
+
+
+def topk_threshold_sort_ref(u_leaves, k: int) -> float:
+    """The sort-path ground truth the bit search must reproduce."""
+    flat = np.concatenate([np.abs(np.asarray(l, np.float32)).reshape(-1)
+                           for l in u_leaves])
+    return float(np.sort(flat)[flat.size - k])

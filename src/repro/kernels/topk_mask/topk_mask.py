@@ -1,0 +1,66 @@
+"""Pallas kernel: bit-pattern top-k threshold search, one session per grid
+step.
+
+Gradient-guided selection needs the exact k-th largest |u| per session.
+Non-negative float32s order exactly as their unsigned bit patterns, so the
+threshold is found by binary search over the 32-bit space — the same 32
+counting passes `core.selection._bitwise_topk_body` unrolls in XLA. The
+XLA lowering re-reads the |u| buffer from HBM on every pass (32 x 4N
+bytes); this kernel keeps each session's bit buffer resident in VMEM and
+runs all 32 passes on-chip — ONE HBM read of 4N bytes per session, which
+is the analytic roofline bound `roofline.analysis.topk_hbm_bytes` states.
+
+The kernel emits only the per-session threshold BITS (B, 1); the caller
+bitcasts to float and materializes the ``|u| >= thr`` masks with the same
+jnp comparison the XLA path uses, so the masks are byte-identical by
+construction (including NaN semantics, which a bits-space ``>=`` would
+get wrong).
+
+VMEM bound: one session's buffer must fit on-chip (~16 MB/core → ~4M
+f32 coordinates). The dispatch layer (`core.selection`) falls back to the
+XLA path above `PALLAS_TOPK_MAX_PER_SESSION`; serving students are ~0.5M
+parameters, comfortably inside.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+# per-session coordinate budget for the single-block kernel (f32 bits +
+# compare scratch well under the ~16 MB VMEM/core)
+PALLAS_TOPK_MAX_PER_SESSION = 4_000_000
+
+
+def _kernel(bits_ref, thr_ref, *, k: int):
+    bits = bits_ref[...]  # (1, R, LANES) uint32 — |u| bit patterns, 0-padded
+    thr = jnp.uint32(0)
+    # 32 counting passes, all in VMEM: zero padding never counts (cand >= 1)
+    for bit in range(31, -1, -1):
+        cand = thr | jnp.uint32(1 << bit)
+        cnt = jnp.sum((bits >= cand).astype(jnp.int32))
+        thr = jnp.where(cnt >= k, cand, thr)
+    thr_ref[...] = thr.reshape(1, 1)
+
+
+def topk_threshold_bits_3d(bits, k: int, *, interpret: bool = True):
+    """Per-session exact top-k threshold bits.
+
+    ``bits``: (B, R, 128) uint32 — each session's |u| float32 bit patterns,
+    flattened/concatenated and zero-padded (`repro.kernels.stacking`).
+    ``k``: static per-session selection count (same for every session in a
+    stack — one γ per fused group by compile-key construction). Returns
+    (B, 1) uint32: the bit pattern of ``sort(|u|)[N-k]``, exactly."""
+    B, R, _ = bits.shape
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, R, LANES), lambda s: (s, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.uint32),
+        interpret=interpret,
+    )(bits)

@@ -171,6 +171,40 @@ def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
     }
 
 
+# ---------------------------------------------------------------------------
+# serving hot-path kernel bounds (Pallas masked-Adam + bit-pattern top-k)
+# ---------------------------------------------------------------------------
+
+
+def adam_step_hbm_bytes(n_params: int, *, param_bytes: int = 4) -> int:
+    """Analytic minimum HBM traffic of ONE masked-Adam step over
+    ``n_params`` coordinates: read p/g/m/v + bool mask, write p/m/v/u —
+    every buffer touched exactly once (what the fused Pallas kernel
+    streams; 33 B/param for f32 params). Multiply by B sessions and K
+    iterations for a fused phase's optimizer-update term."""
+    return int(n_params) * (25 + 2 * param_bytes)
+
+
+def topk_hbm_bytes(n_coords: int, *, passes: int = 1) -> int:
+    """Analytic HBM traffic of one session's bit-pattern top-k selection:
+    ``passes`` reads of the 4-byte |u| buffer plus the 1-byte mask write.
+    The fused Pallas kernel keeps the bits in VMEM across all 32 counting
+    passes (``passes=1``); the XLA lowering re-reads per pass
+    (``passes=32``)."""
+    return int(n_coords) * (4 * passes + 1)
+
+
+def kernel_roofline_fraction(nbytes: int, measured_s: float,
+                             *, chips: int = 1) -> float | None:
+    """Achieved fraction of the HBM roofline: the analytic memory-bound
+    time for ``nbytes`` of traffic over the measured wall-clock. 1.0 means
+    the launch ran at memory-bandwidth speed; the gap is launch overhead,
+    compute, or wasted re-reads."""
+    if not measured_s or measured_s <= 0:
+        return None
+    return (nbytes / (chips * HBM_BW)) / measured_s
+
+
 def serving_stage_report(drift: dict) -> dict:
     """Roofline-style summary of the serving pipeline's *measured* stage
     timings, consuming a `repro.serving.obs.drift_report` dict.
@@ -181,16 +215,25 @@ def serving_stage_report(drift: dict) -> dict:
     seconds / measured seconds, the fraction of `GPUCostModel`'s price the
     real stacked executables achieve. ``bottleneck`` is the stage eating
     the most measured steady time; a low ``model_efficiency`` there is
-    where re-pricing (or a faster kernel) pays first."""
+    where re-pricing (or a faster kernel) pays first.
+
+    Stages whose timing hooks recorded analytic byte traffic (``nbytes`` —
+    the masked-Adam and top-k bounds above) additionally report
+    ``roofline_fraction``: measured steady wall-clock against the
+    memory-bound time for those bytes (`kernel_roofline_fraction`)."""
     stages = {}
     for stage, e in sorted(drift.items()):
         meas, mod = e["measured_steady_s"], e["modeled_steady_s"]
+        nbytes = int(e.get("nbytes", 0))
         stages[stage] = {
             "measured_s": meas,
             "modeled_s": mod,
             "compile_s": e["compile_s"],
             "calls": e["calls"],
             "model_efficiency": (mod / meas) if meas > 0 else None,
+            "nbytes": nbytes,
+            "roofline_fraction": (kernel_roofline_fraction(nbytes, meas)
+                                  if nbytes else None),
         }
     measured = {k: v["measured_s"] for k, v in stages.items()}
     return {

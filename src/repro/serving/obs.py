@@ -516,9 +516,11 @@ def drift_report(cost, stats: dict | None = None) -> dict:
 def debug_snapshot() -> dict:
     """One call answering "what got fused, what compiled, what did it
     cost" — unifies the per-module cache/counter hooks (`core.batched`,
-    `core.selection`, `core.delta`) with the stage timing totals, so tests
-    and benchmarks stop importing four modules to ask."""
-    from repro.core import batched, selection, timing
+    `core.selection`, `core.delta`) with the stage timing totals and the
+    kernel-dispatch decisions (`core.kernel_dispatch`: mode, plus every
+    auto race's winner and measured times), so tests and benchmarks stop
+    importing five modules to ask."""
+    from repro.core import batched, kernel_dispatch, selection, timing
     from repro.core import delta as delta_codec
 
     return {
@@ -529,5 +531,6 @@ def debug_snapshot() -> dict:
         "update_pipeline": batched.update_pipeline_info(),
         "stacked_select_cache": selection.stacked_cache_info(),
         "stacked_encode_cache": delta_codec.stack_cache_info(),
+        "kernel_dispatch": kernel_dispatch.kernel_dispatch_info(),
         "stage_timings": timing.totals(),
     }

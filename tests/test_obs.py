@@ -306,7 +306,10 @@ def test_debug_snapshot_unifies_hooks():
     snap = debug_snapshot()
     assert set(snap) == {"fused_train_cache", "auto_exec_modes",
                          "update_pipeline", "stacked_select_cache",
-                         "stacked_encode_cache", "stage_timings"}
+                         "stacked_encode_cache", "kernel_dispatch",
+                         "stage_timings"}
     assert {"size", "hits", "misses"} <= set(snap["fused_train_cache"])
     assert {"stacked_select_launches",
             "stacked_encode_launches"} <= set(snap["update_pipeline"])
+    assert {"mode", "auto_races"} <= set(snap["kernel_dispatch"])
+    assert snap["kernel_dispatch"]["mode"] in ("auto", "pallas", "xla")

@@ -30,10 +30,18 @@ byte-identical, schema-valid Chrome trace JSON (grant/train/select/encode
 spans, counter tracks, nesting + concurrency invariants) without
 perturbing the schedule, then runs the modeled-vs-measured cost-model
 drift audit on the real fused math (``observability`` section of
-BENCH_serving.json).
+BENCH_serving.json); ``--smoke --chaos`` is the chaos gate — under the
+seeded reference `FaultPlan` (lossy links, an uplink and a downlink
+outage, one device crash, a thermal slowdown) the fleet must conserve
+requests (enqueued == granted + dropped + queued), recover every crashed
+grant through the gpu_done watchdog, retry lost uploads with backoff,
+supersede stale deltas rather than blindly retransmit, and keep the mean
+mIoU within a bounded gap of the fault-free fleet — while
+``FaultPlan.none()`` stays bit-identical to running with no plan at all
+(``chaos`` section of BENCH_serving.json).
 
 Run: PYTHONPATH=src python -m benchmarks.serving_scale [--smoke]
-     [--gpus 4] [--fused] [--overlap] [--trace out.json]
+     [--gpus 4] [--fused] [--overlap] [--trace out.json] [--chaos]
 """
 from __future__ import annotations
 
@@ -77,13 +85,15 @@ def run_fleet(n: int, *, n_gpus: int = 1, policy: str = "fair",
               duration: float = 240.0, max_queue: int = 32,
               fuse_train: int = 1, streams: StreamModel | None = None,
               cost: GPUCostModel | None = None,
-              fuse_updates: bool = True, tracer=None) -> dict:
+              fuse_updates: bool = True, tracer=None,
+              faults=None) -> dict:
+    cfg_kw = {} if faults is None else {"faults": faults}
     engine = ServingEngine(
         make_stub_fleet(n), policy=policy, cost=cost or GPUCostModel(),
         cfg=ServingConfig(duration=duration, max_queue=max_queue,
                           n_gpus=n_gpus, fuse_train=fuse_train,
                           fuse_updates=fuse_updates,
-                          streams=streams or StreamModel()),
+                          streams=streams or StreamModel(), **cfg_kw),
         tracer=tracer)
     return engine.run()
 
@@ -400,6 +410,135 @@ def run_trace_probe(trace_path: str, *, n: int = 8,
     return trace
 
 
+def run_chaos_probe(*, n: int = 12, n_gpus: int = 2,
+                    duration: float = 240.0,
+                    miou_gap_bound: float = 0.10) -> dict:
+    """Chaos gate (`--chaos`): the engine under the reference `FaultPlan`
+    (lossy links, an uplink and a downlink outage, one device crash, a
+    thermal slowdown) must (1) keep `FaultPlan.none()` bit-identical to a
+    fault-free run, (2) be deterministic under faults (same plan, same
+    results), (3) balance its books — every request enqueued is granted,
+    dropped, or still queued; every crashed grant is recovered; every lost
+    delta resolves to retransmit/supersede/abandon — and (4) degrade
+    gracefully: zero lost sessions and a bounded mean-mIoU gap vs the
+    fault-free fleet. Also traces a chaos run (byte-identical, schema-valid,
+    retry/outage/crash/supersede vocabulary). Writes the ``chaos`` section
+    of BENCH_serving.json."""
+    from repro.serving import FaultPlan, Tracer, validate_trace
+
+    drop = ("wall_s", "events_per_sec", "events_per_sec_steady",
+            "observability")
+
+    def core(r):
+        return {k: v for k, v in r.items() if k not in drop}
+
+    kw = dict(n_gpus=n_gpus, duration=duration, fuse_train=4)
+    with Timer() as t:
+        # 1. faults-off golden: FaultPlan.none() == no plan, bit-for-bit
+        base = run_fleet(n, **kw)
+        none = run_fleet(n, faults=FaultPlan.none(), **kw)
+        assert core(base) == core(none), (
+            "FaultPlan.none() perturbed the fault-free engine")
+        # 2. determinism under the reference plan
+        plan = FaultPlan.reference(duration, n_gpus=n_gpus)
+        r = run_fleet(n, faults=plan, **kw)
+        r2 = run_fleet(n, faults=plan, **kw)
+        assert core(r) == core(r2), (
+            "chaos run not reproducible with the same seeded plan")
+    ch = r["chaos"]
+    # 3a. request conservation: nothing vanishes
+    assert r["requests_enqueued"] == (r["requests_granted"]
+                                      + r["dropped_requests"]
+                                      + r["unserved_backlog"]), (
+        f"request books don't balance: {r['requests_enqueued']} enqueued vs "
+        f"{r['requests_granted']} granted + {r['dropped_requests']} dropped "
+        f"+ {r['unserved_backlog']} queued")
+    # 3b. every crashed grant recovered, every fault path exercised
+    assert ch["device_crashes"] >= 1, "the crash window never fired"
+    assert ch["grants_killed"] >= 1, (
+        "the crash killed no grant (plan should hit a loaded device)")
+    assert ch["grants_recovered"] == ch["grants_killed"], (
+        f"{ch['grants_killed']} grants killed but only "
+        f"{ch['grants_recovered']} recovered by the watchdog")
+    assert ch["watchdog_fires"] == ch["grants_recovered"]
+    assert ch["uploads_lost"] > 0 and ch["upload_retries"] > 0
+    assert ch["deltas_lost"] > 0
+    assert ch["deltas_superseded"] > 0, (
+        "the downlink outage should supersede at least one stale delta")
+    # 3c. every lost delta resolves (retransmitted, superseded or abandoned)
+    assert (ch["deltas_retransmitted"] + ch["deltas_superseded"]
+            + ch["deltas_abandoned"]) >= ch["deltas_lost"]
+    assert ch["slowed_grants"] >= 1, "the slowdown window never fired"
+    # 3d. zero lost sessions: every client still evaluates and the served
+    # phase counts stay consistent
+    assert len(r["miou_per_client"]) == n
+    assert all(m == m for m in r["miou_per_client"]), "a session went dark"
+    assert sum(r["phases_per_client"]) <= r["phases_served"]
+    # 4. graceful degradation, not collapse
+    gap = base["mean_miou"] - r["mean_miou"]
+    assert 0.0 <= gap <= miou_gap_bound, (
+        f"mIoU gap under faults is {gap:.3f} "
+        f"(fault-free {base['mean_miou']:.3f} -> {r['mean_miou']:.3f}); "
+        f"bound is {miou_gap_bound}")
+    # 5. the flight recorder under chaos: deterministic, valid, and carries
+    # the fault vocabulary without perturbing the schedule
+    def traced():
+        tracer = Tracer()
+        rr = run_fleet(n, faults=plan, tracer=tracer, **kw)
+        return rr, tracer.to_json()
+
+    rt, j1 = traced()
+    _, j2 = traced()
+    assert j1 == j2, "chaos trace not byte-identical across identical runs"
+    trace = json.loads(j1)
+    problems = validate_trace(trace)
+    assert not problems, f"chaos trace schema violations: {problems[:5]}"
+    names = {e.get("name") for e in trace["traceEvents"]}
+    for want in ("outage", "crash", "retry", "supersede"):
+        assert want in names, f"chaos trace missing {want!r} events"
+    assert core(rt) == core(r), "tracing perturbed the chaos schedule"
+    emit(f"serving_scale.chaos.g{n_gpus}.n{n}", t.us,
+         f"miou_gap={gap:.3f};crashes={ch['device_crashes']};"
+         f"grants_recovered={ch['grants_recovered']};"
+         f"upload_retries={ch['upload_retries']};"
+         f"deltas_superseded={ch['deltas_superseded']};"
+         f"shed={ch['requests_shed']}")
+    bench = {
+        "chaos": {
+            "n_clients": n,
+            "n_gpus": n_gpus,
+            "duration_s": duration,
+            "plan": {"seed": plan.seed, "up_loss": plan.up_loss,
+                     "down_loss": plan.down_loss,
+                     "outages": len(plan.outages),
+                     "crashes": len(plan.crashes),
+                     "slowdowns": len(plan.slowdowns)},
+            "mean_miou_fault_free": base["mean_miou"],
+            "mean_miou_under_faults": r["mean_miou"],
+            "miou_gap": gap,
+            "miou_gap_bound": miou_gap_bound,
+            "final_staleness_max_s": r["chaos"]["final_staleness_max_s"],
+            "link_outage_s": ch["link_outage_s"],
+            "crash_s": ch["crash_s"],
+            "grants_killed": ch["grants_killed"],
+            "grants_recovered": ch["grants_recovered"],
+            "sessions_recovered": ch["sessions_recovered"],
+            "requests_shed": ch["requests_shed"],
+            "upload_retries": ch["upload_retries"],
+            "uploads_lost": ch["uploads_lost"],
+            "upload_bytes_wasted": ch["upload_bytes_wasted"],
+            "deltas_lost": ch["deltas_lost"],
+            "deltas_retransmitted": ch["deltas_retransmitted"],
+            "deltas_superseded": ch["deltas_superseded"],
+            "retransmitted_bytes": ch["retransmitted_bytes"],
+            "superseded_bytes": ch["superseded_bytes"],
+            "dropped_frame_bytes": r["dropped_frame_bytes"],
+        }
+    }
+    _write_bench(bench)
+    return bench["chaos"]
+
+
 def run_drift_probe(n_sessions: int = 4, k_iters: int = 4,
                     size: int = 16) -> dict:
     """Modeled-vs-measured cost audit on the REAL fused math: run a small
@@ -478,6 +617,14 @@ def main() -> None:
                          "select+encode pricing vs per-session charges, "
                          "plus the real-math byte-identical wall-clock "
                          "compare")
+    ap.add_argument("--chaos", action="store_true",
+                    help="chaos gate: deterministic fault injection "
+                         "(lossy links, outages, a device crash, a "
+                         "slowdown) must conserve requests, recover every "
+                         "crashed grant via the watchdog, supersede stale "
+                         "deltas, and hold a bounded mIoU gap vs the "
+                         "fault-free fleet; FaultPlan.none() must be "
+                         "bit-identical to no plan")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="flight-recorder gate: trace a fused dual-stream "
                          "fleet, assert byte-identical + schema-valid "
@@ -486,6 +633,17 @@ def main() -> None:
                          "fused math")
     ap.add_argument("--duration", type=float, default=None)
     args = ap.parse_args()
+    if args.smoke and args.chaos:
+        cb = run_chaos_probe()
+        print(f"serving_scale chaos smoke OK "
+              f"(mIoU {cb['mean_miou_fault_free']:.3f} -> "
+              f"{cb['mean_miou_under_faults']:.3f}, gap "
+              f"{cb['miou_gap']:.3f} <= {cb['miou_gap_bound']}; "
+              f"{cb['grants_killed']} crashed grants all recovered, "
+              f"{cb['upload_retries']} upload retries, "
+              f"{cb['deltas_superseded']} deltas superseded)")
+        print("serving_scale smoke OK")
+        return
     if args.smoke and args.trace:
         trace = run_trace_probe(args.trace)
         ob = run_drift_probe()
@@ -579,6 +737,8 @@ def main() -> None:
             run_overlap_sweep(duration=args.duration or 240.0)
         if args.update_pipeline:
             run_update_sweep(duration=args.duration or 240.0)
+        if args.chaos:
+            run_chaos_probe(duration=args.duration or 240.0)
 
 
 if __name__ == "__main__":

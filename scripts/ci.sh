@@ -38,6 +38,14 @@ if [ "${1:-}" = "--kernels" ]; then
     exit $?
 fi
 
+# `bash scripts/ci.sh --chaos` runs ONLY the chaos gate (fast local loop
+# for fault-injection work); the full run includes it below.
+if [ "${1:-}" = "--chaos" ]; then
+    echo "== chaos gate: benchmarks.serving_scale --smoke --chaos =="
+    python -m benchmarks.serving_scale --smoke --chaos
+    exit $?
+fi
+
 echo "== tier-1 gate: pytest (minus known env-red modules) =="
 python -m pytest -q \
     --ignore=tests/test_dryrun_small.py
@@ -92,6 +100,18 @@ python -m benchmarks.serving_scale --smoke --trace "$trace_out"
 trace_smoke=$?
 rm -f "$trace_out"
 
+echo "== chaos smoke: benchmarks.serving_scale --smoke --chaos =="
+# asserts the engine under the seeded reference FaultPlan (lossy links,
+# uplink + downlink outages, a device crash, a thermal slowdown) conserves
+# requests (enqueued == granted + dropped + queued), recovers every crashed
+# grant via the gpu_done watchdog, retries lost uploads with backoff,
+# supersedes stale deltas instead of blindly retransmitting, and holds the
+# mean-mIoU gap vs the fault-free fleet within bound — while
+# FaultPlan.none() stays bit-identical to running with no plan; writes the
+# chaos section of BENCH_serving.json
+python -m benchmarks.serving_scale --smoke --chaos
+chaos_smoke=$?
+
 echo "== kernel gate: benchmarks.kernels_bench --kernels =="
 # asserts the Pallas serving kernels against their XLA references on the
 # real fused path: byte-identical selection/wire masks, fp16 wire-delta
@@ -101,6 +121,6 @@ echo "== kernel gate: benchmarks.kernels_bench --kernels =="
 python -m benchmarks.kernels_bench --kernels
 kernel_gate=$?
 
-echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke, update smoke exit=$update_smoke, overlap smoke exit=$overlap_smoke, trace smoke exit=$trace_smoke, kernel gate exit=$kernel_gate"
-[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && [ "$update_smoke" -eq 0 ] && [ "$overlap_smoke" -eq 0 ] && [ "$trace_smoke" -eq 0 ] && [ "$kernel_gate" -eq 0 ] && echo "CI OK"
-exit $((tier1 | smoke | pool_smoke | fused_smoke | update_smoke | overlap_smoke | trace_smoke | kernel_gate))
+echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke, update smoke exit=$update_smoke, overlap smoke exit=$overlap_smoke, trace smoke exit=$trace_smoke, chaos smoke exit=$chaos_smoke, kernel gate exit=$kernel_gate"
+[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && [ "$update_smoke" -eq 0 ] && [ "$overlap_smoke" -eq 0 ] && [ "$trace_smoke" -eq 0 ] && [ "$chaos_smoke" -eq 0 ] && [ "$kernel_gate" -eq 0 ] && echo "CI OK"
+exit $((tier1 | smoke | pool_smoke | fused_smoke | update_smoke | overlap_smoke | trace_smoke | chaos_smoke | kernel_gate))

@@ -64,10 +64,40 @@ modeled-vs-measured cost audit (`obs.drift_report` over `core.timing`
 stage stats), and `obs.debug_snapshot` unifies the fused-path cache /
 counter introspection hooks. Tracing defaults off and the recorder never
 changes the schedule: two runs, traced or not, pop identical events.
+
+Fault model (`serving.faults`): chaos is a *plan*, not a dice roll.
+``ServingConfig(faults=FaultPlan(...))`` injects a seeded, fully
+deterministic fault schedule — per-transfer link loss (splitmix64-hashed
+draws, one counter per direction per client), link outage windows
+(`OutageWindow`, up/down/both, fleet-wide or per-client), cyclic
+`network.RateTrace` bandwidth replay (`LinkSpec.from_trace` loads the
+``benchmarks/traces/*.json`` fixtures), device crash windows
+(`CrashWindow`) and thermal slowdowns (`SlowdownWindow`). Frame uploads
+retry with exponential backoff plus deterministic jitter and are abandoned
+(frames dropped, bytes accounted) after ``max_retries``; delta downloads
+use *supersede* semantics — a lost delta is retransmitted only while it is
+still the newest one, otherwise the retransmit slot notes a ``supersede``
+and the client waits for the fresh delta already in flight, inferring on
+its stale model meanwhile (``chaos.final_staleness_max_s`` gauges the
+damage). A device crash kills the in-flight grant; the ``gpu_done``
+watchdog (armed per grant generation) recovers it — releases the device,
+spills residency so survivors restage from scratch, and requeues every
+member session — while admission control sheds new requests only when the
+whole pool is dead. ``FaultPlan.none()`` (the default) is bit-identical to
+PR-7: no extra events, no RNG draws, byte-identical traces. The reference
+chaos gate lives in ``benchmarks/serving_scale.py --smoke --chaos`` /
+``scripts/ci.sh --chaos``.
 """
 from repro.serving.engine import ServingConfig, ServingEngine
 from repro.serving.events import Event, EventQueue
-from repro.serving.network import ClientNetwork, Link, LinkSpec
+from repro.serving.faults import (
+    CrashWindow,
+    FaultInjector,
+    FaultPlan,
+    OutageWindow,
+    SlowdownWindow,
+)
+from repro.serving.network import ClientNetwork, Link, LinkSpec, RateTrace
 from repro.serving.obs import (
     MetricsRegistry,
     Tracer,
@@ -108,4 +138,6 @@ __all__ = [
     "ServingConfig", "ServingEngine",
     "Tracer", "MetricsRegistry", "debug_snapshot", "drift_report",
     "validate_trace",
+    "FaultPlan", "FaultInjector", "OutageWindow", "CrashWindow",
+    "SlowdownWindow", "RateTrace",
 ]

@@ -53,6 +53,17 @@ message are off until their knobs are set), and the policy's `assign`
 degenerates to the old single `pick`. Eval still reads ground truth directly
 (it is measurement, not traffic). Everything else — who gets which GPU, when
 bytes move, how stale a delta is — is modeled.
+
+Chaos mode (``cfg.faults``, `serving.faults.FaultPlan`) adds the failure
+events: ``upload_retry`` (a lost/deferred frame batch retries with
+exponential backoff + deterministic jitter, bounded by ``max_retries``),
+``delta_retx`` (a lost delta retransmits ONLY if the server has not
+produced a newer one — supersede semantics; the edge keeps inferring on
+its stale model meanwhile), ``crash``/``recover`` (a device dies: its
+residents spill, its in-flight grant is killed and the armed ``watchdog``
+requeues the fused group on a survivor via the normal migration
+machinery), and admission sheds load while the whole pool is down. The
+default `FaultPlan.none()` arms none of it and is bit-identical.
 """
 from __future__ import annotations
 
@@ -65,7 +76,9 @@ from repro.core import timing
 from repro.core.batched import update_pipeline_info
 from repro.core.scheduler import GPUCostModel
 from repro.serving.events import EventQueue
-from repro.serving.obs import PID_SERVER, MetricsRegistry, drift_report
+from repro.serving.faults import FaultInjector, FaultPlan
+from repro.serving.obs import (PID_SERVER, TID_DOWN, MetricsRegistry,
+                               drift_report)
 from repro.serving.policies import GPURequest, SchedulingPolicy, make_policy
 from repro.serving.resources import GPUPool, MigrationModel, StreamModel
 from repro.serving.session import train_many
@@ -108,6 +121,11 @@ class ServingConfig:
     # label vs train stream interaction per device. The default (serialized,
     # no preemption) is the PR-3 single busy clock, bit-for-bit.
     streams: StreamModel = field(default_factory=StreamModel)
+    # ---- fault injection (serving.faults) --------------------------------
+    # seeded chaos schedule: link loss/outages, rate-trace replay, device
+    # crash/slowdown windows. The default `FaultPlan.none()` disables every
+    # hook — the engine's schedule is bit-identical to the fault-free code.
+    faults: FaultPlan = field(default_factory=FaultPlan)
 
 
 @dataclass
@@ -174,7 +192,28 @@ class ServingEngine:
             "upload": self._on_upload, "request": self._on_request,
             "gpu_done": self._on_gpu_done, "gpu_free": self._on_gpu_free,
             "label_seg": self._on_label_seg,
-            "delta": self._on_delta, "rate_ctrl": self._on_rate_ctrl}
+            "delta": self._on_delta, "rate_ctrl": self._on_rate_ctrl,
+            "upload_retry": self._on_upload_retry,
+            "delta_retx": self._on_delta_retx,
+            "crash": self._on_crash, "recover": self._on_recover,
+            "watchdog": self._on_watchdog}
+        # fault injection (serving.faults). Like tracing, every hook is
+        # behind the `_chaos` flag, so a fault-free plan does no extra work,
+        # pushes no extra events, and keeps the schedule bit-identical
+        self._chaos = self.cfg.faults.active
+        self._inj = FaultInjector(self.cfg.faults) if self._chaos else None
+        self._grant_gen = 0  # monotone grant ids (crash/watchdog matching)
+        self._live_grants: dict[int, dict] = {}  # gen -> in-flight grant
+        self._grant_on: dict[int, int] = {}  # gid -> gen of its live grant
+        self._delta_seq: dict[int, int] = {}  # client -> freshest delta id
+        self._last_delta_arrival: dict[int, float] = {}  # staleness telemetry
+        if self._chaos:
+            plan = self.cfg.faults
+            for s in self.sessions:
+                if plan.up_rate_trace is not None:
+                    s.net.up.trace = plan.up_rate_trace
+                if plan.down_rate_trace is not None:
+                    s.net.down.trace = plan.down_rate_trace
         # flight recorder (serving.obs.Tracer). None = tracing off: every
         # emission site is behind an `is not None` check, so the disabled
         # engine does no extra work and its schedule is bit-identical
@@ -208,6 +247,34 @@ class ServingEngine:
             "update_pipeline.update_s_charged", 0.0)
         self.update_s_sequential = m.counter(
             "update_pipeline.update_s_sequential", 0.0)
+        # request conservation (the chaos gate's books must balance:
+        # enqueued == granted + dropped + unserved backlog, always)
+        self.requests_enqueued = m.counter("requests_enqueued")
+        self.requests_granted = m.counter("requests_granted")
+        # wasted uplink: a tail-dropped victim's frames already crossed the
+        # air — their bytes were spent for nothing (saturation telemetry)
+        self.dropped_frame_bytes = m.counter("dropped_frame_bytes")
+        # chaos telemetry (all zero in fault-free runs)
+        self.chaos_upload_retries = m.counter("chaos.upload_retries")
+        self.chaos_uploads_lost = m.counter("chaos.uploads_lost")
+        self.chaos_uploads_abandoned = m.counter("chaos.uploads_abandoned")
+        self.chaos_upload_bytes_wasted = m.counter(
+            "chaos.upload_bytes_wasted")
+        self.chaos_deltas_lost = m.counter("chaos.deltas_lost")
+        self.chaos_deltas_retransmitted = m.counter(
+            "chaos.deltas_retransmitted")
+        self.chaos_retransmitted_bytes = m.counter(
+            "chaos.retransmitted_bytes")
+        self.chaos_deltas_superseded = m.counter("chaos.deltas_superseded")
+        self.chaos_superseded_bytes = m.counter("chaos.superseded_bytes")
+        self.chaos_deltas_abandoned = m.counter("chaos.deltas_abandoned")
+        self.chaos_requests_shed = m.counter("chaos.requests_shed")
+        self.chaos_grants_killed = m.counter("chaos.grants_killed")
+        self.chaos_grants_recovered = m.counter("chaos.grants_recovered")
+        self.chaos_sessions_recovered = m.counter(
+            "chaos.sessions_recovered")
+        self.chaos_watchdog_fires = m.counter("chaos.watchdog_fires")
+        self.chaos_slowed_grants = m.counter("chaos.slowed_grants")
 
     # ---- admission control ---------------------------------------------
     def _admit_sessions(self) -> None:
@@ -290,35 +357,98 @@ class ServingEngine:
     def _on_upload(self, ev) -> None:
         s = self.sessions[ev.client]
         idxs = s.take_outbox()
-        arrival = s.net.send_up(ev.time, s.upload_bytes(len(idxs)))
-        self.q.push(arrival, "request", ev.client, idxs)
+        nbytes = s.upload_bytes(len(idxs))
+        if self._chaos:
+            self._try_upload(ev.time, ev.client, idxs, nbytes, 0)
+        else:
+            arrival = s.net.send_up(ev.time, nbytes)
+            self.q.push(arrival, "request", ev.client, (idxs, nbytes))
         nxt = ev.time + s.t_update
         if nxt < self.cfg.duration:
             self.q.push(nxt, "upload", ev.client)
 
+    def _try_upload(self, t: float, client: int, idxs, nbytes: int,
+                    attempt: int) -> None:
+        """Chaos uplink path: an outage defers the send (no link occupancy),
+        a lost transfer burns the link and retries with exponential backoff
+        + deterministic jitter; past ``max_retries`` the batch is abandoned
+        (the edge keeps sampling — degradation, not a stall)."""
+        inj, plan = self._inj, self.cfg.faults
+        s = self.sessions[client]
+        if inj.outage_until("up", client, t) is not None:
+            if attempt >= plan.max_retries:
+                self.chaos_uploads_abandoned.inc()
+                self.dropped_frame_bytes.inc(nbytes)
+                return
+            self.chaos_upload_retries.inc()
+            retry_t = (t + plan.detect_timeout_s
+                       + inj.backoff_s(client, attempt))
+            self.q.push(retry_t, "upload_retry", client,
+                        (idxs, nbytes, attempt + 1))
+            return
+        what = "frames" if attempt == 0 else "retry"
+        arrival = s.net.send_up(t, nbytes, what=what)
+        if inj.transfer_lost("up", client):
+            # the bytes crossed the air and vanished: wasted uplink
+            self.chaos_uploads_lost.inc()
+            self.chaos_upload_bytes_wasted.inc(nbytes)
+            if attempt >= plan.max_retries:
+                self.chaos_uploads_abandoned.inc()
+                self.dropped_frame_bytes.inc(nbytes)
+                return
+            self.chaos_upload_retries.inc()
+            retry_t = (arrival + plan.detect_timeout_s
+                       + inj.backoff_s(client, attempt))
+            self.q.push(retry_t, "upload_retry", client,
+                        (idxs, nbytes, attempt + 1))
+            return
+        self.q.push(arrival, "request", client, (idxs, nbytes))
+
+    def _on_upload_retry(self, ev) -> None:
+        idxs, nbytes, attempt = ev.payload
+        self._try_upload(ev.time, ev.client, idxs, nbytes, attempt)
+
     def _on_request(self, ev) -> None:
         s = self.sessions[ev.client]
-        if not self.pool.has_free():
-            self.deferred.inc()
+        idxs, nbytes = ev.payload
         req = GPURequest(client=ev.client, t_request=ev.time,
-                         n_frames=len(ev.payload), k_iters=s.k_iters,
+                         n_frames=len(idxs), k_iters=s.k_iters,
                          deadline=ev.time + s.t_update,
                          phi=_phi_of(s), t_update=s.t_update,
-                         state_bytes=getattr(s, "state_bytes", 0))
+                         state_bytes=getattr(s, "state_bytes", 0),
+                         upload_nbytes=int(nbytes))
+        self._enqueue(ev.time, req, list(idxs))
+
+    def _enqueue(self, t: float, req: GPURequest, idxs: list) -> None:
+        """Admission for a server-side request — fresh arrivals and
+        watchdog-recovered requeues both land here, so the conservation
+        books (enqueued == granted + dropped + backlog) balance by
+        construction."""
+        self.requests_enqueued.inc()
+        if self._chaos and self.pool.n_alive() == 0:
+            # the whole pool is down: shed at admission instead of queueing
+            # unboundedly behind devices that cannot drain the backlog
+            self.chaos_requests_shed.inc()
+            self.dropped_requests.inc()
+            self.dropped_frame_bytes.inc(req.upload_nbytes)
+            return
+        if not self.pool.has_free():
+            self.deferred.inc()
         if len(self._queue) >= self.cfg.max_queue:
             # saturated: the policy chooses the sacrifice (tail drop by
             # default; gain-aware evicts the lowest-value queued request)
             self._refresh_phi()
-            victim = self.policy.evict(ev.time, [b.req for b in self._queue] + [req])
+            victim = self.policy.evict(t, [b.req for b in self._queue] + [req])
             self.dropped_requests.inc()  # the victim's frames are lost
+            self.dropped_frame_bytes.inc(victim.upload_nbytes)
             if victim is req:
                 return
             self._queue.remove(next(b for b in self._queue if b.req is victim))
-        self._queue.append(_Backlog(req=req, idxs=list(ev.payload)))
+        self._queue.append(_Backlog(req=req, idxs=idxs))
         self.max_backlog.set_max(len(self._queue))
         if self.tracer is not None:
-            self._trace_queue(ev.time)
-        self._maybe_start(ev.time)
+            self._trace_queue(t)
+        self._maybe_start(t)
 
     def _maybe_start(self, t: float) -> None:
         # no new grants past the horizon: the backlog is left unserved (and
@@ -365,6 +495,7 @@ class ServingEngine:
                 rb = next(b for b in self._queue if b.req is r)
                 self._queue.remove(rb)
                 rider_backlogs.append(rb)
+            self.requests_granted.inc(1 + len(rider_backlogs))
             self._start_service(t, backlog, a.gpu, rider_backlogs)
         if self.tracer is not None:
             self._trace_queue(t)
@@ -397,6 +528,11 @@ class ServingEngine:
             return
         dev = self.pool.device(gid)
         riders = riders or []
+        # injected device slowdown (thermal throttle / noisy neighbor):
+        # compute stretches, data movement (migration) does not
+        slow = (self._inj.slowdown_factor(gid, t) if self._chaos else 1.0)
+        if slow > 1.0:
+            self.chaos_slowed_grants.inc()
         # cross-client batched labeling: one launch on the granted device
         # clears every still-queued session's unlabeled frames, not just the
         # picked one (a co-granted device then finds its backlog pre-labeled)
@@ -405,7 +541,7 @@ class ServingEngine:
         else:
             to_label = [backlog, *riders]
         n_label = sum(len(b.idxs) for b in to_label)
-        label_s = dev.cost.label_batch_s(n_label)
+        label_s = dev.cost.label_batch_s(n_label) * slow
         if n_label:
             self.label_batches.inc()
             self.labels_total.inc(n_label)
@@ -420,7 +556,7 @@ class ServingEngine:
             self.sessions[b.req.client].label_and_ingest(b.idxs, t_labeled)
             b.idxs = []
         n_sessions = 1 + len(riders)
-        train_s = dev.cost.train_batch_s(n_sessions, backlog.req.k_iters)
+        train_s = dev.cost.train_batch_s(n_sessions, backlog.req.k_iters) * slow
         dur = mig_s + label_s + sum(rider_migs) + train_s
         self.pool.grant(gid, backlog.req.client, t, dur, self.cfg.duration,
                         mig_s, label_s)
@@ -454,8 +590,25 @@ class ServingEngine:
         if riders:
             self.fused_launches.inc()
             self.fused_sessions.inc(n_sessions)
+        gen = self._note_grant(gid, [backlog, *riders], t + dur)
         self.q.push(t + dur, "gpu_done", backlog.req.client,
-                    (gid, tuple(b.req.client for b in riders)))
+                    (gid, tuple(b.req.client for b in riders), gen))
+
+    def _note_grant(self, gid: int, members: list, done_t: float) -> int:
+        """Register a grant generation. Under chaos the grant is tracked as
+        in-flight and a watchdog is armed past its planned completion: if
+        the device dies mid-grant, ``gpu_done`` never lands and the watchdog
+        is what detects the straggler and requeues the fused group."""
+        self._grant_gen += 1
+        gen = self._grant_gen
+        if self._chaos:
+            self._live_grants[gen] = {
+                "gid": gid, "done_t": done_t, "dead": False,
+                "clients": [b.req.client for b in members]}
+            self._grant_on[gid] = gen
+            self.q.push(done_t + self.cfg.faults.watchdog_s, "watchdog",
+                        members[0].req.client, gen)
+        return gen
 
     # ---- dual-stream service path --------------------------------------
     def _take_segment(self, b: _Backlog) -> _Segment:
@@ -464,17 +617,18 @@ class ServingEngine:
         b.segment = seg
         return seg
 
-    def _charge_label_launch(self, gid: int, t: float,
-                             segs: list[_Segment]) -> _LabelLaunch | None:
+    def _charge_label_launch(self, gid: int, t: float, segs: list[_Segment],
+                             scale: float = 1.0) -> _LabelLaunch | None:
         """One batched labeling launch for ``segs`` on ``gid``'s label
         stream; each segment completes at a frame-batch boundary and gets
-        its own `label_seg` event (the preemption quanta)."""
+        its own `label_seg` event (the preemption quanta). ``scale`` > 1 is
+        an injected device slowdown stretching the whole launch."""
         segs = [s for s in segs if s.idxs]
         if not segs:
             return None
         cost = self.pool.device(gid).cost
-        rate = cost.teacher_infer_s * cost.label_batch_discount
-        cum, work = [], cost.label_batch_overhead_s
+        rate = cost.teacher_infer_s * cost.label_batch_discount * scale
+        cum, work = [], cost.label_batch_overhead_s * scale
         for s in segs:
             work += len(s.idxs) * rate
             cum.append(work)
@@ -577,6 +731,9 @@ class ServingEngine:
         at grant time (boundaries are deterministic), so preemption is a
         schedule edit, not a rollback."""
         members = [backlog, *riders]
+        slow = (self._inj.slowdown_factor(gid, t) if self._chaos else 1.0)
+        if slow > 1.0:
+            self.chaos_slowed_grants.inc()
         tr = self.tracer
         sub = None
         if tr is not None:
@@ -621,14 +778,14 @@ class ServingEngine:
             mig_end = t
         own = ([s for s in requeued if any(s is b.segment for b in members)]
                + [self._take_segment(b) for b in members if b.idxs])
-        self._charge_label_launch(gid, t, own)
+        self._charge_label_launch(gid, t, own, scale=slow)
         waiting = [b.segment for b in members
                    if b.segment is not None and not b.segment.done]
         t_labeled = max([t] + [s.bound for s in waiting])
         # --- the training phase itself -----------------------------------
         n_sessions = len(members)
         train_s = self.pool.device(gid).cost.train_batch_s(
-            n_sessions, backlog.req.k_iters)
+            n_sessions, backlog.req.k_iters) * slow
         _, done_t = self.pool.charge(
             gid, "train", max(mig_end, t_labeled), train_s, name="train",
             args=None if sub is None else dict(sub, b=n_sessions,
@@ -637,7 +794,7 @@ class ServingEngine:
         bg = [s for s in requeued if not any(s is b.segment for b in members)]
         if self.cfg.batch_labeling:
             bg += [self._take_segment(b) for b in self._queue if b.idxs]
-        self._charge_label_launch(gid, t, bg)
+        self._charge_label_launch(gid, t, bg, scale=slow)
         # --- bookkeeping (same shape as the legacy path) ------------------
         self.pool.grant_streams(gid, backlog.req.client, t)
         self.pool.note_migration(mig_s)
@@ -649,8 +806,9 @@ class ServingEngine:
         if riders:
             self.fused_launches.inc()
             self.fused_sessions.inc(n_sessions)
+        gen = self._note_grant(gid, members, done_t)
         self.q.push(done_t, "gpu_done", backlog.req.client,
-                    (gid, tuple(b.req.client for b in riders)))
+                    (gid, tuple(b.req.client for b in riders), gen))
 
     def _on_label_seg(self, ev) -> None:
         launch, seg = ev.payload
@@ -663,7 +821,16 @@ class ServingEngine:
         self.sessions[seg.client].label_and_ingest(seg.idxs, ev.time)
 
     def _on_gpu_done(self, ev) -> None:
-        gid, rider_clients = ev.payload
+        gid, rider_clients, gen = ev.payload
+        if self._chaos:
+            info = self._live_grants.get(gen)
+            if info is None or info["dead"]:
+                # the device died mid-grant: this completion never happened.
+                # The armed watchdog is the detector — it requeues the fused
+                # group and releases the device
+                return
+            del self._live_grants[gen]
+            self._grant_on.pop(gid, None)
         clients = [ev.client, *rider_clients]
         for c in clients:
             self._active.discard(c)
@@ -741,10 +908,17 @@ class ServingEngine:
                     if sub is not None and upd_s > 0.0:
                         trace_update(u0, u1, cost.select_s,
                                      cost.delta_comp_s(delta.total_bytes), 1)
-                arrival = s.net.send_down(t_free, delta.total_bytes)
-                if gspan is not None and s.net.last_span is not None:
-                    tr.flow(gspan, s.net.last_span)
-                self.q.push(arrival, "delta", c, (delta, t_free))
+                if self._chaos:
+                    # freshest-delta bookkeeping: any older in-flight retry
+                    # for this client is now stale and will supersede
+                    self._delta_seq[c] = self._delta_seq.get(c, 0) + 1
+                    self._send_delta(t_free, c, delta, t_free,
+                                     self._delta_seq[c], 0, gspan)
+                else:
+                    arrival = s.net.send_down(t_free, delta.total_bytes)
+                    if gspan is not None and s.net.last_span is not None:
+                        tr.flow(gspan, s.net.last_span)
+                    self.q.push(arrival, "delta", c, (delta, t_free))
             if self.cfg.asr_ctrl_bytes > 0:
                 # the ASR's new rate rides the downlink too (PR-1 modeled it
                 # as free); the edge samples at its old rate until it lands
@@ -771,9 +945,114 @@ class ServingEngine:
         self.pool.release(ev.payload)
         self._maybe_start(ev.time)
 
+    # ---- chaos: lossy downlink with supersede semantics -----------------
+    def _send_delta(self, t: float, c: int, delta, t_produced: float,
+                    seq: int, attempt: int, gspan=None) -> None:
+        """Ship a delta over a lossy downlink. An outage defers the send, a
+        lost transfer schedules a retransmit after backoff — but a retx is
+        *supersede-checked* first (`_on_delta_retx`): if the server has
+        produced a newer delta by then, the stale one is never resent
+        (retransmitting old weights wastes the paper's precious downlink).
+        The arrival event carries the ORIGINAL production time, so delta
+        latency honestly reflects retry-induced staleness."""
+        inj, plan = self._inj, self.cfg.faults
+        s = self.sessions[c]
+        if inj.outage_until("down", c, t) is not None:
+            if attempt >= plan.max_retries:
+                self.chaos_deltas_abandoned.inc()
+                return
+            retry_t = t + plan.detect_timeout_s + inj.backoff_s(c, attempt)
+            self.q.push(retry_t, "delta_retx", c,
+                        (delta, t_produced, seq, attempt + 1))
+            return
+        nbytes = delta.total_bytes
+        if attempt > 0:
+            self.chaos_deltas_retransmitted.inc()
+            self.chaos_retransmitted_bytes.inc(nbytes)
+        arrival = s.net.send_down(t, nbytes,
+                                  what="delta" if attempt == 0 else "retry")
+        if gspan is not None and s.net.last_span is not None:
+            self.tracer.flow(gspan, s.net.last_span)
+        if inj.transfer_lost("down", c):
+            self.chaos_deltas_lost.inc()
+            if attempt >= plan.max_retries:
+                self.chaos_deltas_abandoned.inc()
+                return
+            retry_t = (arrival + plan.detect_timeout_s
+                       + inj.backoff_s(c, attempt))
+            self.q.push(retry_t, "delta_retx", c,
+                        (delta, t_produced, seq, attempt + 1))
+            return
+        self.q.push(arrival, "delta", c, (delta, t_produced))
+
+    def _on_delta_retx(self, ev) -> None:
+        delta, t_produced, seq, attempt = ev.payload
+        c = ev.client
+        if self._delta_seq.get(c, 0) != seq:
+            # a fresher delta exists (shipped or shipping): drop this one
+            self.chaos_deltas_superseded.inc()
+            self.chaos_superseded_bytes.inc(delta.total_bytes)
+            if self.tracer is not None:
+                self.tracer.instant(self.tracer.client_pid(c), TID_DOWN,
+                                    "supersede", ev.time,
+                                    {"bytes": int(delta.total_bytes)})
+            return
+        self._send_delta(ev.time, c, delta, t_produced, seq, attempt)
+
+    # ---- chaos: device crash / recovery ---------------------------------
+    def _on_crash(self, ev) -> None:
+        gid, _until = ev.payload
+        self.pool.crash(gid, ev.time)
+        gen = self._grant_on.get(gid)
+        if gen is not None:
+            info = self._live_grants.get(gen)
+            if info is not None and not info["dead"]:
+                # the grant in flight dies with the device; its gpu_done is
+                # suppressed and the watchdog will recover the fused group
+                info["dead"] = True
+                self.chaos_grants_killed.inc()
+
+    def _on_recover(self, ev) -> None:
+        self.pool.recover(ev.payload)
+        self._maybe_start(ev.time)
+
+    def _on_watchdog(self, ev) -> None:
+        gen = ev.payload
+        info = self._live_grants.pop(gen, None)
+        if info is None:
+            return  # the grant completed normally; the watchdog disarms
+        gid = info["gid"]
+        self._grant_on.pop(gid, None)
+        self.chaos_watchdog_fires.inc()
+        self.chaos_grants_recovered.inc()
+        self.chaos_sessions_recovered.inc(len(info["clients"]))
+        gspan = self._grant_spans.pop(gid, None)
+        if gspan is not None:
+            # close the dead grant at its planned end so its component
+            # spans stay nested; mark it so the trace shows the casualty
+            gspan.end = info["done_t"]
+            if gspan.args is not None:
+                gspan.args = dict(gspan.args, crashed=True)
+        self.pool.release(gid)
+        for c in info["clients"]:
+            self._active.discard(c)
+            s = self.sessions[c]
+            # requeue with no frames: the phase's labels already landed (or
+            # died with the device); the session just needs its training
+            # phase re-run — residency was spilled by the crash, so the
+            # regrant pays a full restage on a surviving device
+            req = GPURequest(client=c, t_request=ev.time, n_frames=0,
+                             k_iters=s.k_iters,
+                             deadline=ev.time + s.t_update,
+                             phi=_phi_of(s), t_update=s.t_update,
+                             state_bytes=getattr(s, "state_bytes", 0))
+            self._enqueue(ev.time, req, [])
+
     def _on_delta(self, ev) -> None:
         delta, t_sent = ev.payload
         self.sessions[ev.client].apply_delta(delta, t_sent, ev.time)
+        if self._chaos:
+            self._last_delta_arrival[ev.client] = ev.time
 
     def _on_rate_ctrl(self, ev) -> None:
         self.sessions[ev.client].apply_rate_ctrl(ev.payload)
@@ -791,6 +1070,26 @@ class ServingEngine:
                 self.q.push(0.0, "sample", i)
                 self.q.push(min(s.t_update, self.cfg.duration * 0.999),
                             "upload", i)
+        if self._chaos:
+            dur = self.cfg.duration
+            for w in self.cfg.faults.crashes:
+                if w.gid >= self.pool.n or w.start >= dur:
+                    continue
+                self.q.push(w.start, "crash", None, (w.gid, w.end))
+                self.q.push(w.end, "recover", None, w.gid)
+                if self.tracer is not None:
+                    self.tracer.gpu_fault_span(
+                        w.gid, "crash", w.start, min(w.end, dur))
+            if self.tracer is not None:
+                for d, c, a, b in self._inj.outage_windows():
+                    if a >= dur:
+                        continue
+                    targets = ([c] if c is not None
+                               else [s.idx for s in self.sessions])
+                    for ci in targets:
+                        self.tracer.client_fault_span(
+                            ci, "outage", max(a, 0.0), min(b, dur),
+                            {"direction": d})
 
     def _dispatch(self, ev) -> None:
         self._handlers[ev.kind](ev)
@@ -873,6 +1172,18 @@ class ServingEngine:
         m.set("mean_down_kbps", float(np.mean([d for _, d in kbps])))
         m.set("delta_latency_mean_s", lat.mean())
         m.set("delta_latency_max_s", lat.max())
+        # fault telemetry (plan-level gauges only exist in chaos runs; the
+        # chaos.* counters are always registered and zero without faults)
+        if self._chaos:
+            m.set("chaos.link_outage_s",
+                  self._inj.link_outage_s(cfg.duration, len(self.sessions)))
+            m.set("chaos.crash_s", self._inj.crash_s(cfg.duration))
+            m.set("chaos.device_crashes", self.pool.crashes)
+            m.set("chaos.crash_spills", self.pool.crash_spills)
+            stale = [cfg.duration - self._last_delta_arrival.get(s.idx, 0.0)
+                     for s in self.sessions if s.admitted]
+            m.set("chaos.final_staleness_max_s",
+                  max(stale) if stale else 0.0)
         m.set("events_processed", self.q.popped)
         m.set("events_per_sec", self.q.popped / max(wall_s, 1e-9))
         # steady-state engine throughput: the XLA compile / first-launch

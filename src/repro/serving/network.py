@@ -7,22 +7,110 @@ propagation delay. Every byte is also charged to the client's
 `BandwidthLedger`, so per-client Kbps falls out of the same accounting the
 single-client benchmarks use. With finite rates, deltas arrive *stale*: the
 server's weights have moved on by the time an edge applies them.
+
+Links are constant-rate by default; attach a `RateTrace` (directly, via
+`LinkSpec.from_trace`, or through a `FaultPlan`) to replay a cellular-style
+variable-bandwidth trace instead — transfer completion is then the exact
+piecewise integral of the trace, still fully deterministic.
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
 
 from repro.core.bandwidth import BandwidthLedger
 
 
 @dataclass(frozen=True)
+class RateTrace:
+    """A cyclic variable-bandwidth replay: ``kbps[i]`` holds for the i-th
+    ``interval_s`` slice of wall-clock, repeating past the end. Zero-rate
+    slices model dead air (a burst gap), so at least one slice must be
+    positive or no transfer could ever finish."""
+
+    kbps: tuple[float, ...]
+    interval_s: float = 1.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "kbps",
+                           tuple(float(r) for r in self.kbps))
+        if not self.kbps:
+            raise ValueError("RateTrace needs at least one rate sample")
+        if any(r < 0.0 for r in self.kbps):
+            raise ValueError("RateTrace rates must be >= 0 kbps")
+        if not any(r > 0.0 for r in self.kbps):
+            raise ValueError("RateTrace needs a positive rate somewhere, "
+                             "or transfers never finish")
+        if self.interval_s <= 0.0:
+            raise ValueError("RateTrace interval_s must be > 0")
+
+    @property
+    def mean_kbps(self) -> float:
+        return sum(self.kbps) / len(self.kbps)
+
+    def rate_at(self, t: float) -> float:
+        """Instantaneous rate (kbps) at absolute time ``t``, cyclic."""
+        return self.kbps[int(t // self.interval_s) % len(self.kbps)]
+
+    def finish_time(self, start: float, nbits: float) -> float:
+        """When a transfer of ``nbits`` beginning at ``start`` drains,
+        walking the trace slice by slice (exact piecewise integral)."""
+        if nbits <= 0.0:
+            return start
+        n, iv = len(self.kbps), self.interval_s
+        idx = int(start // iv)
+        t, remaining = start, float(nbits)
+        while True:
+            rate_bps = self.kbps[idx % n] * 1e3
+            seg_end = (idx + 1) * iv
+            cap = rate_bps * (seg_end - t)
+            if rate_bps > 0.0 and remaining <= cap:
+                return t + remaining / rate_bps
+            remaining -= cap
+            t = seg_end
+            idx += 1
+
+
+@dataclass(frozen=True)
 class LinkSpec:
     """Per-client provisioning. Defaults sit near the paper's operating
-    points: a few-hundred-Kbps video uplink, a Mbps-class downlink."""
+    points: a few-hundred-Kbps video uplink, a Mbps-class downlink.
+    Optional per-direction `RateTrace`s override the constant rates."""
 
     up_kbps: float = 1000.0
     down_kbps: float = 2000.0
     prop_delay_s: float = 0.05
+    up_trace: RateTrace | None = None
+    down_trace: RateTrace | None = None
+
+    @classmethod
+    def from_trace(cls, path_or_dict, *, prop_delay_s: float | None = None
+                   ) -> "LinkSpec":
+        """Build a spec from a JSON trace fixture (path or parsed dict):
+        ``{"interval_s": 1.0, "up_kbps": [...], "down_kbps": [...]}``.
+        A direction without samples keeps the constant default; scalar
+        rates are set to each trace's mean so rate-only consumers (cost
+        models, back-of-envelope sizing) see the right average."""
+        if isinstance(path_or_dict, dict):
+            data = path_or_dict
+        else:
+            with open(path_or_dict) as f:
+                data = json.load(f)
+        iv = float(data.get("interval_s", 1.0))
+        kw: dict = {}
+        up = data.get("up_kbps")
+        if up:
+            kw["up_trace"] = RateTrace(tuple(up), iv)
+            kw["up_kbps"] = kw["up_trace"].mean_kbps
+        down = data.get("down_kbps")
+        if down:
+            kw["down_trace"] = RateTrace(tuple(down), iv)
+            kw["down_kbps"] = kw["down_trace"].mean_kbps
+        delay = (prop_delay_s if prop_delay_s is not None
+                 else data.get("prop_delay_s"))
+        if delay is not None:
+            kw["prop_delay_s"] = float(delay)
+        return cls(**kw)
 
 
 @dataclass
@@ -34,6 +122,7 @@ class Link:
     busy_until: float = 0.0
     bytes_carried: int = 0
     transfers: int = 0
+    trace: RateTrace | None = None  # overrides rate_kbps when set
 
     def tx_seconds(self, nbytes: int) -> float:
         if self.rate_kbps <= 0:  # unmodeled link: instantaneous
@@ -44,7 +133,10 @@ class Link:
         """Occupy the link starting no earlier than ``t_now``; returns the
         arrival time at the far end."""
         start = max(t_now, self.busy_until)
-        self.busy_until = start + self.tx_seconds(nbytes)
+        if self.trace is not None:
+            self.busy_until = self.trace.finish_time(start, nbytes * 8.0)
+        else:
+            self.busy_until = start + self.tx_seconds(nbytes)
         self.bytes_carried += int(nbytes)
         self.transfers += 1
         return self.busy_until + self.prop_delay_s
@@ -58,8 +150,10 @@ class ClientNetwork:
     ledger: BandwidthLedger = field(default_factory=BandwidthLedger)
 
     def __post_init__(self):
-        self.up = Link(self.spec.up_kbps, self.spec.prop_delay_s)
-        self.down = Link(self.spec.down_kbps, self.spec.prop_delay_s)
+        self.up = Link(self.spec.up_kbps, self.spec.prop_delay_s,
+                       trace=self.spec.up_trace)
+        self.down = Link(self.spec.down_kbps, self.spec.prop_delay_s,
+                         trace=self.spec.down_trace)
         # flight recorder wiring (set by the engine when tracing): the span
         # covers link occupancy [start, busy_until]; propagation delay is
         # in-flight time, not link time, so it stays outside the span

@@ -37,8 +37,10 @@ import numpy as np
 PID_SERVER = 0
 GPU_PID_BASE = 1  # gpu g -> pid GPU_PID_BASE + g
 TID_LABEL, TID_TRAIN, TID_GRANT = 1, 2, 3
+TID_FAULT = 4  # injected crash windows (chaos runs only)
 STREAM_TIDS = {"label": TID_LABEL, "train": TID_TRAIN}
 TID_UP, TID_DOWN = 1, 2
+TID_CLIENT_FAULT = 3  # injected link outages (chaos runs only)
 
 
 def _us(t: float) -> int:
@@ -105,6 +107,9 @@ class Tracer:
             "fuse_updates": cfg.fuse_updates,
         }
         self._client_base = max(1001, GPU_PID_BASE + pool.n + 1)
+        # fault tracks appear only in chaos runs, so fault-free traces stay
+        # byte-identical to the pre-chaos recorder
+        chaos = getattr(getattr(cfg, "faults", None), "active", False)
         self.process(PID_SERVER, "serving-engine")
         self.thread(PID_SERVER, 0, "events")
         for d in pool.devices:
@@ -113,11 +118,15 @@ class Tracer:
             self.thread(pid, TID_LABEL, "stream:label")
             self.thread(pid, TID_TRAIN, "stream:train")
             self.thread(pid, TID_GRANT, "grants")
+            if chaos:
+                self.thread(pid, TID_FAULT, "faults")
         for s in sessions:
             pid = self.client_pid(s.idx)
             self.process(pid, f"client{s.idx}")
             self.thread(pid, TID_UP, "uplink")
             self.thread(pid, TID_DOWN, "downlink")
+            if chaos:
+                self.thread(pid, TID_CLIENT_FAULT, "faults")
 
     def gpu_pid(self, gid: int) -> int:
         return GPU_PID_BASE + gid
@@ -151,6 +160,18 @@ class Tracer:
         tid = TID_UP if direction == "up" else TID_DOWN
         return self.span(self.client_pid(client), tid, name, start, end,
                          cat=f"net:{direction}", args=args)
+
+    def gpu_fault_span(self, gid: int, name: str, start: float, end: float,
+                       args: dict | None = None) -> Span:
+        """A crash window on a device's fault track (chaos runs)."""
+        return self.span(self.gpu_pid(gid), TID_FAULT, name, start, end,
+                         cat="fault", args=args)
+
+    def client_fault_span(self, client: int, name: str, start: float,
+                          end: float, args: dict | None = None) -> Span:
+        """A link-outage window on a client's fault track (chaos runs)."""
+        return self.span(self.client_pid(client), TID_CLIENT_FAULT, name,
+                         start, end, cat="fault", args=args)
 
     def counter(self, pid: int, name: str, t: float, values: dict) -> None:
         self._counters.append((self._next(), t, pid, name, values))
@@ -249,11 +270,18 @@ def validate_trace(trace: dict,
     * the required counter tracks exist;
     * per device stream, spans never overlap (each stream executes its
       launches serially — preemption truncates, it does not double-book);
+    * per client link track (uplink/downlink), spans never overlap — link
+      occupancy is serial, so a ``retry`` span may not overlap its link's
+      live transfer (the chaos retry path waits for the link);
     * under a ``serialized`` stream model the two streams of one device
       are mutually exclusive, so per-device span concurrency is <= 1
       (<= 2 under ``overlap``);
     * every span tagged with a grant id nests inside that grant's span
-      (the fused train/select/encode stages belong to their device grant).
+      (the fused train/select/encode stages belong to their device grant);
+    * fault vocabulary: ``cat="fault"`` spans are named ``outage``/
+      ``crash`` and live on a fault track (client/device respectively),
+      ``retry`` spans live on a ``net:*`` link track, and ``supersede``
+      instants live on client processes.
     """
     problems: list[str] = []
     evs = trace.get("traceEvents")
@@ -262,6 +290,10 @@ def validate_trace(trace: dict,
     gpu_pids = {e["pid"] for e in evs
                 if e.get("ph") == "M" and e.get("name") == "process_name"
                 and str(e.get("args", {}).get("name", "")).startswith("gpu")}
+    client_pids = {e["pid"] for e in evs
+                   if e.get("ph") == "M" and e.get("name") == "process_name"
+                   and str(e.get("args", {}).get("name", ""))
+                   .startswith("client")}
     counters = {e.get("name") for e in evs if e.get("ph") == "C"}
     for name in require_counters:
         if name not in counters:
@@ -273,12 +305,15 @@ def validate_trace(trace: dict,
                 problems.append(f"span missing {fld!r}: {e}")
         if e.get("dur", 0) < 0:
             problems.append(f"negative duration: {e}")
-    # per-stream serial execution
+    # per-stream serial execution; client links are serial too — retries
+    # queue behind the link like any transfer (fault tracks are exempt:
+    # a client's up and down outage windows may legitimately overlap)
     by_track: dict = {}
     for e in spans:
         by_track.setdefault((e["pid"], e["tid"]), []).append(e)
     for (pid, tid), track in by_track.items():
-        if pid not in gpu_pids:
+        if not (pid in gpu_pids
+                or (pid in client_pids and tid in (TID_UP, TID_DOWN))):
             continue
         track.sort(key=lambda e: (e["ts"], e["ts"] + e["dur"]))
         for a, b in zip(track, track[1:]):
@@ -318,6 +353,28 @@ def validate_trace(trace: dict,
             problems.append(
                 f"span {e['name']}@{e['ts']} escapes grant {g} "
                 f"[{ge['ts']}, {ge['ts'] + ge['dur']}]")
+    # fault vocabulary (chaos runs)
+    for e in spans:
+        if e.get("cat") == "fault":
+            if e["name"] == "outage":
+                if not (e["pid"] in client_pids
+                        and e["tid"] == TID_CLIENT_FAULT):
+                    problems.append(
+                        f"outage span off a client fault track: {e}")
+            elif e["name"] == "crash":
+                if not (e["pid"] in gpu_pids and e["tid"] == TID_FAULT):
+                    problems.append(
+                        f"crash span off a device fault track: {e}")
+            else:
+                problems.append(
+                    f"unknown fault span name {e['name']!r}: {e}")
+        elif e.get("name") == "retry":
+            if not str(e.get("cat", "")).startswith("net:"):
+                problems.append(f"retry span off a network link track: {e}")
+    for e in evs:
+        if e.get("ph") == "i" and e.get("name") == "supersede":
+            if e.get("pid") not in client_pids:
+                problems.append(f"supersede instant off a client: {e}")
     return problems
 
 

@@ -52,6 +52,9 @@ class GPURequest:
     t_update: float  # session's current update period (ATR-stretched)
     state_bytes: int = 0  # session training state (weights+opt+buffer)
     gpu: int | None = None  # device the grant landed on (engine fills)
+    upload_nbytes: int = 0  # uplink bytes already spent carrying the frames
+    # (a tail-dropped victim's upload was wasted air time — the engine's
+    # dropped_frame_bytes counter reads this field at eviction)
 
 
 @dataclass(frozen=True)

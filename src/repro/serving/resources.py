@@ -193,6 +193,7 @@ class GPUDevice:
     gid: int
     cost: GPUCostModel = field(default_factory=GPUCostModel)
     busy: bool = False
+    crashed: bool = False  # fault injection: dead devices take no grants
     busy_s: float = 0.0
     grants: int = 0
     label_s: float = 0.0  # legacy-path stream attribution (in-window seconds)
@@ -265,6 +266,8 @@ class GPUPool:
         self.preemptions = 0  # in-flight labeling launches split by a grant
         self.preempted_frames = 0  # frames requeued by those splits
         self.preempt_s_total = 0.0  # modeled preemption cost paid
+        self.crashes = 0  # injected device crashes
+        self.crash_spills = 0  # sessions whose residency a crash destroyed
 
     # ---- capacity ------------------------------------------------------
     @property
@@ -275,10 +278,38 @@ class GPUPool:
         return self.devices[gid]
 
     def free_ids(self) -> list[int]:
-        return [d.gid for d in self.devices if not d.busy]
+        return [d.gid for d in self.devices
+                if not d.busy and not d.crashed]
 
     def has_free(self) -> bool:
-        return any(not d.busy for d in self.devices)
+        return any(not d.busy and not d.crashed for d in self.devices)
+
+    def n_alive(self) -> int:
+        return sum(1 for d in self.devices if not d.crashed)
+
+    # ---- fault injection ------------------------------------------------
+    def crash(self, gid: int, t: float) -> int:
+        """Device ``gid`` dies at ``t``: it takes no further grants and all
+        session state resident on it is lost — those sessions spill to host
+        and their next grant pays a full restage on whichever surviving
+        device the policy picks (the normal migration machinery rebuilds
+        residency). The engine handles any grant in flight (watchdog +
+        requeue); here we only flip the flag and drop residency. Returns
+        how many residents were spilled."""
+        dev = self.devices[gid]
+        dev.crashed = True
+        victims = list(self._last_grant[gid])
+        for c in victims:
+            del self._last_grant[gid][c]
+            self._home.pop(c, None)
+            self._spilled.add(c)
+        self.crashes += 1
+        self.crash_spills += len(victims)
+        return len(victims)
+
+    def recover(self, gid: int) -> None:
+        """Device ``gid`` rejoins the pool (empty: its HBM was lost)."""
+        self.devices[gid].crashed = False
 
     # ---- residency -----------------------------------------------------
     def home_of(self, client: int) -> int | None:

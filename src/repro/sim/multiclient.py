@@ -85,6 +85,7 @@ def run_multiclient(
     link: LinkSpec | None = None,
     serving_cfg: ServingConfig | None = None,
     tracer=None,
+    faults=None,
 ) -> dict:
     """Returns mean mIoU across clients + scheduler/network telemetry.
 
@@ -110,6 +111,11 @@ def run_multiclient(
     with ``tracer.dump("out.json")`` and open in Perfetto. ``tracer=None``
     (the default) records nothing and changes nothing.
 
+    ``faults`` attaches a seeded `repro.serving.FaultPlan` chaos schedule
+    (link loss/outages, rate-trace replay, device crashes/slowdowns);
+    ``faults=None`` (the default) keeps the run bit-identical to the
+    pre-chaos engine.
+
     The ``duration`` kwarg governs the run: it sizes the videos AND the
     engine horizon. A ``serving_cfg`` supplies the other engine knobs
     (queue cap, admission, batching, migration model, its own ``n_gpus``);
@@ -128,16 +134,18 @@ def run_multiclient(
                 f"policy; it cannot be combined with policy={policy!r}")
         policy = "affinity"
     if serving_cfg is None:
+        fkw = {} if faults is None else {"faults": faults}
         cfg = ServingConfig(duration=duration, n_gpus=n_gpus or 1,
                             fuse_train=fuse_train or 1,
-                            streams=streams or StreamModel())
+                            streams=streams or StreamModel(), **fkw)
     else:
         cfg = dataclasses.replace(
             serving_cfg, duration=duration,
             n_gpus=serving_cfg.n_gpus if n_gpus is None else n_gpus,
             fuse_train=(serving_cfg.fuse_train if fuse_train is None
                         else fuse_train),
-            streams=(serving_cfg.streams if streams is None else streams))
+            streams=(serving_cfg.streams if streams is None else streams),
+            faults=(serving_cfg.faults if faults is None else faults))
     engine = ServingEngine(sessions, policy=policy, cost=cost, cfg=cfg,
                            tracer=tracer)
     return engine.run()

@@ -17,6 +17,7 @@ from repro.core.scheduler import GPUCostModel
 from repro.roofline.analysis import serving_stage_report
 from repro.serving import (
     ClientNetwork,
+    FaultPlan,
     LinkSpec,
     MetricsRegistry,
     ServingConfig,
@@ -41,13 +42,15 @@ def _fleet(n, link=None, rate_head=0.15):
 
 
 def _run(n=6, *, n_gpus=2, fuse=4, streams=None, cost=None, duration=90.0,
-         fuse_updates=True, policy="fair", tracer=None, rate_head=0.15):
+         fuse_updates=True, policy="fair", tracer=None, rate_head=0.15,
+         faults=None):
+    fkw = {} if faults is None else {"faults": faults}
     eng = ServingEngine(
         _fleet(n, rate_head=rate_head), policy=policy,
         cost=cost or GPUCostModel(),
         cfg=ServingConfig(duration=duration, n_gpus=n_gpus, fuse_train=fuse,
                           fuse_updates=fuse_updates,
-                          streams=streams or StreamModel()),
+                          streams=streams or StreamModel(), **fkw),
         tracer=tracer)
     return eng.run()
 
@@ -174,6 +177,83 @@ def test_validate_trace_rejects_tampering():
     gutted = dict(good, traceEvents=[e for e in good["traceEvents"]
                                      if e.get("name") != "queue_depth"])
     assert any("queue_depth" in p for p in validate_trace(gutted))
+
+
+# ---------------- chaos traces ----------------
+
+
+def _chaos_traced(n=10, duration=120.0, n_gpus=2):
+    tracer = Tracer()
+    r = _run(n, n_gpus=n_gpus, duration=duration, policy="gain",
+             tracer=tracer,
+             faults=FaultPlan.reference(duration, n_gpus=n_gpus))
+    return r, tracer
+
+
+def test_chaos_trace_validates_with_fault_vocabulary():
+    r, tracer = _chaos_traced()
+    trace = json.loads(tracer.to_json())
+    assert validate_trace(trace) == []
+    evs = trace["traceEvents"]
+    names = {e.get("name") for e in evs}
+    assert "outage" in names  # link-outage windows on client fault tracks
+    assert "crash" in names  # the crash window on the device fault track
+    assert "retry" in names  # retransmits occupy the link like transfers
+    # the fault threads exist only because chaos is on
+    fault_threads = [e for e in evs if e.get("ph") == "M"
+                     and e.get("name") == "thread_name"
+                     and e["args"]["name"] == "faults"]
+    assert fault_threads
+    assert r["chaos"]["uploads_lost"] > 0
+
+
+def test_chaos_trace_byte_identical_across_runs():
+    _, t1 = _chaos_traced()
+    _, t2 = _chaos_traced()
+    assert t1.to_json() == t2.to_json()
+
+
+def test_validate_trace_rejects_retry_overlapping_live_transfer():
+    _, tracer = _chaos_traced()
+    trace = json.loads(tracer.to_json())
+    assert validate_trace(trace) == []
+    # forge a retry that double-books a client uplink while a real transfer
+    # occupies it — link occupancy is serial, the validator must object
+    up = next(e for e in trace["traceEvents"]
+              if e.get("ph") == "X" and e.get("cat") == "net:up"
+              and e["dur"] > 0)
+    forged = dict(up, name="retry", ts=up["ts"] + up["dur"] // 2)
+    trace["traceEvents"].append(forged)
+    assert any("overlapping" in p for p in validate_trace(trace))
+
+
+def test_validate_trace_rejects_misplaced_fault_events():
+    _, tracer = _chaos_traced()
+    base = tracer.to_json()
+    # a crash span on a client's fault track is vocabulary abuse
+    trace = json.loads(base)
+    crash = next(e for e in trace["traceEvents"]
+                 if e.get("ph") == "X" and e.get("cat") == "fault"
+                 and e["name"] == "crash")
+    outage = next(e for e in trace["traceEvents"]
+                  if e.get("ph") == "X" and e.get("cat") == "fault"
+                  and e["name"] == "outage")
+    crash["pid"], crash["tid"] = outage["pid"], outage["tid"]
+    assert any("crash span off a device fault track" in p
+               for p in validate_trace(trace))
+    # a supersede instant belongs to a client process, not the server
+    trace2 = json.loads(base)
+    sup = [e for e in trace2["traceEvents"]
+           if e.get("ph") == "i" and e.get("name") == "supersede"]
+    if sup:  # the reference plan produces these; guard stays for tuning
+        sup[0]["pid"] = 1  # PID_SERVER
+        assert any("supersede instant off a client" in p
+                   for p in validate_trace(trace2))
+    # an unknown fault-span name is rejected outright
+    trace3 = json.loads(base)
+    next(e for e in trace3["traceEvents"]
+         if e.get("ph") == "X" and e.get("cat") == "fault")["name"] = "gremlin"
+    assert any("unknown fault span" in p for p in validate_trace(trace3))
 
 
 # ---------------- metrics registry ----------------

@@ -40,8 +40,17 @@ mIoU within a bounded gap of the fault-free fleet — while
 ``FaultPlan.none()`` stays bit-identical to running with no plan at all
 (``chaos`` section of BENCH_serving.json).
 
+``--smoke --fleet`` is the fleet-control-plane gate — the struct-of-arrays
+`FleetState` path (cohort events, vectorized policies/admission) must
+reproduce the per-object engine bit-for-bit at small n across policies and
+under chaos (`FaultPlan.none()` trace bytes included), sustain 10⁴ stub
+sessions at >= 10x the per-object events/sec, and record the 10³ -> 10⁵
+sweep (events/sec + peak RSS, O(1)-memory telemetry at 10⁵) in the
+``fleet`` section of BENCH_serving.json.
+
 Run: PYTHONPATH=src python -m benchmarks.serving_scale [--smoke]
      [--gpus 4] [--fused] [--overlap] [--trace out.json] [--chaos]
+     [--fleet]
 """
 from __future__ import annotations
 
@@ -49,10 +58,13 @@ import argparse
 import json
 import os
 
+import numpy as np
+
 from benchmarks.common import Timer, emit
 from repro.core.scheduler import GPUCostModel
 from repro.serving import (
     ClientNetwork,
+    FleetState,
     LinkSpec,
     ServingConfig,
     ServingEngine,
@@ -79,6 +91,19 @@ def make_stub_fleet(n: int, *, stationary_frac: float = 0.3,
             net=ClientNetwork(link),
         ))
     return fleet
+
+
+def make_fleet_state(n: int, *, stationary_frac: float = 0.3,
+                     telemetry: str = "full") -> FleetState:
+    """Struct-of-arrays twin of `make_stub_fleet`: same mixed fleet, same
+    per-client parameters and link provisioning, array storage."""
+    static = np.arange(n) < int(stationary_frac * n)
+    return FleetState(
+        n,
+        rate=np.where(static, 0.15, 1.0),
+        dynamics=np.where(static, 0.0005, 0.004),
+        up_kbps=500.0, down_kbps=2000.0,
+        telemetry=telemetry)
 
 
 def run_fleet(n: int, *, n_gpus: int = 1, policy: str = "fair",
@@ -539,6 +564,150 @@ def run_chaos_probe(*, n: int = 12, n_gpus: int = 2,
     return bench["chaos"]
 
 
+def _rss_mb() -> float:
+    """Current resident set in MB (VmRSS; falls back to the process peak)."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    import resource
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _peak_rss_mb() -> float:
+    import resource
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def run_fleet_probe(*, eq_n: int = 32, floor_n: int = 10_000,
+                    floor_ratio: float = 10.0,
+                    sweep=(1_000, 10_000, 100_000),
+                    duration: float = 240.0,
+                    eq_duration: float = 60.0) -> dict:
+    """Fleet-control-plane gate (`--fleet`). Three parts:
+
+    1. **equivalence** — at ``eq_n`` clients the `FleetState` engine must
+       reproduce the per-object `StubSession` engine bit-for-bit (results
+       minus wall-clock fields) across fair/edf/gain, pool sizes, an
+       admission cap, and the seeded reference `FaultPlan` — and a traced
+       `FaultPlan.none()` run must emit byte-identical trace JSON;
+    2. **throughput floor** — at ``floor_n`` stubs (same fleet, same
+       duration, full telemetry on both sides) the fleet path must sustain
+       >= ``floor_ratio`` x the per-object events/sec, with identical
+       results;
+    3. **sweep** — 10³ -> 10⁵ clients, recording events/sec and resident
+       memory per point (the 10⁵ point runs O(1)-memory ``moments``
+       telemetry) into the ``fleet`` section of BENCH_serving.json.
+    """
+    from repro.serving import FaultPlan, Tracer
+
+    drop = ("wall_s", "events_per_sec", "events_per_sec_steady",
+            "observability")
+
+    def core(r):
+        return {k: v for k, v in r.items() if k not in drop}
+
+    checks = []
+    with Timer() as t:
+        # 1. equivalence sweep: policies x pool sizes x admission cap
+        for pol in ("fair", "edf", "gain"):
+            for n_gpus in (1, 4):
+                cfg = ServingConfig(duration=eq_duration, max_queue=32,
+                                    n_gpus=n_gpus,
+                                    admission_util_cap=(0.8 if n_gpus == 4
+                                                        else None))
+                r1 = ServingEngine(make_stub_fleet(eq_n), policy=pol,
+                                   cfg=cfg).run()
+                r2 = ServingEngine(make_fleet_state(eq_n), policy=pol,
+                                   cfg=cfg).run()
+                assert core(r1) == core(r2), (
+                    f"fleet path diverged from per-object: policy={pol} "
+                    f"n_gpus={n_gpus}")
+                checks.append(f"{pol}/g{n_gpus}")
+        # chaos: the reference plan must drive both paths identically
+        plan = FaultPlan.reference(eq_duration, n_gpus=2)
+        cfg = ServingConfig(duration=eq_duration, max_queue=32, n_gpus=2,
+                            faults=plan)
+        r1 = ServingEngine(make_stub_fleet(eq_n), policy="gain",
+                           cfg=cfg).run()
+        r2 = ServingEngine(make_fleet_state(eq_n), policy="gain",
+                           cfg=cfg).run()
+        assert core(r1) == core(r2), "fleet path diverged under chaos"
+        checks.append("chaos")
+        # FaultPlan.none() trace bytes: the recorder sees the same schedule
+        tcfg = ServingConfig(duration=eq_duration, max_queue=32, n_gpus=2,
+                             faults=FaultPlan.none())
+        tr1, tr2 = Tracer(), Tracer()
+        r1 = ServingEngine(make_stub_fleet(8), policy="gain", cfg=tcfg,
+                           tracer=tr1).run()
+        r2 = ServingEngine(make_fleet_state(8), policy="gain", cfg=tcfg,
+                           tracer=tr2).run()
+        assert core(r1) == core(r2), "traced fleet results diverged"
+        assert tr1.to_json() == tr2.to_json(), (
+            "fleet trace bytes differ from per-object under FaultPlan.none()")
+        checks.append("trace-bytes")
+    emit(f"serving_scale.fleet.eq.n{eq_n}", t.us,
+         f"checks={len(checks)};duration={eq_duration}")
+
+    # 2. throughput floor at floor_n, same duration both paths
+    floor_cfg = ServingConfig(duration=duration, max_queue=32, n_gpus=4)
+    with Timer() as t:
+        r_fl = ServingEngine(make_fleet_state(floor_n), cfg=floor_cfg).run()
+    fleet_evps = r_fl["events_per_sec"]
+    with Timer() as t2:
+        r_obj = ServingEngine(make_stub_fleet(floor_n), cfg=floor_cfg).run()
+    obj_evps = r_obj["events_per_sec"]
+    assert core(r_obj) == core(r_fl), (
+        f"fleet path diverged from per-object at n={floor_n}")
+    ratio = fleet_evps / max(obj_evps, 1e-9)
+    assert ratio >= floor_ratio, (
+        f"fleet events/sec is only {ratio:.1f}x the per-object path at "
+        f"n={floor_n} ({fleet_evps:.0f} vs {obj_evps:.0f}); floor is "
+        f"{floor_ratio}x")
+    emit(f"serving_scale.fleet.floor.n{floor_n}", t.us,
+         f"fleet_evps={fleet_evps:.0f};object_evps={obj_evps:.0f};"
+         f"ratio={ratio:.1f};events={r_fl['events_processed']}")
+
+    # 3. the 10^3 -> 10^5 sweep (largest point folds telemetry to moments)
+    sweep_out = {}
+    for n in sweep:
+        telemetry = "moments" if n >= 100_000 else "full"
+        with Timer() as t:
+            r = ServingEngine(make_fleet_state(n, telemetry=telemetry),
+                              cfg=floor_cfg).run()
+        sweep_out[str(n)] = {
+            "events_per_sec": r["events_per_sec"],
+            "events_processed": r["events_processed"],
+            "wall_s": r["wall_s"],
+            "mean_miou": r["mean_miou"],
+            "telemetry": telemetry,
+            "rss_mb": round(_rss_mb(), 1),
+        }
+        emit(f"serving_scale.fleet.sweep.n{n}", t.us,
+             f"evps={r['events_per_sec']:.0f};"
+             f"events={r['events_processed']};telemetry={telemetry};"
+             f"rss_mb={sweep_out[str(n)]['rss_mb']}")
+
+    bench = {
+        "fleet": {
+            "duration_s": duration,
+            "equivalence": {"n_clients": eq_n, "duration_s": eq_duration,
+                            "checks": checks},
+            "floor": {"n_clients": floor_n,
+                      "events_per_sec_fleet": fleet_evps,
+                      "events_per_sec_object": obj_evps,
+                      "ratio": ratio, "floor_ratio": floor_ratio},
+            "sweep": sweep_out,
+            "peak_rss_mb": round(_peak_rss_mb(), 1),
+        }
+    }
+    _write_bench(bench)
+    return bench["fleet"]
+
+
 def run_drift_probe(n_sessions: int = 4, k_iters: int = 4,
                     size: int = 16) -> dict:
     """Modeled-vs-measured cost audit on the REAL fused math: run a small
@@ -625,6 +794,14 @@ def main() -> None:
                          "deltas, and hold a bounded mIoU gap vs the "
                          "fault-free fleet; FaultPlan.none() must be "
                          "bit-identical to no plan")
+    ap.add_argument("--fleet", action="store_true",
+                    help="fleet control-plane gate: the struct-of-arrays "
+                         "FleetState path must reproduce the per-object "
+                         "engine bit-for-bit at small n (policies x pool "
+                         "sizes x admission x chaos, byte-identical "
+                         "traces) and sustain >= 10x its events/sec at "
+                         "10^4 clients, then sweep 10^3 -> 10^5 recording "
+                         "events/sec + resident memory")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="flight-recorder gate: trace a fused dual-stream "
                          "fleet, assert byte-identical + schema-valid "
@@ -633,6 +810,16 @@ def main() -> None:
                          "fused math")
     ap.add_argument("--duration", type=float, default=None)
     args = ap.parse_args()
+    if args.smoke and args.fleet:
+        fb = run_fleet_probe(duration=args.duration or 120.0)
+        top = fb["sweep"][str(max(int(k) for k in fb["sweep"]))]
+        print(f"serving_scale fleet smoke OK "
+              f"({fb['floor']['ratio']:.0f}x per-object events/sec at "
+              f"n={fb['floor']['n_clients']}; top of sweep "
+              f"{top['events_per_sec']:.2e} ev/s, {top['rss_mb']:.0f} MB "
+              f"RSS, telemetry={top['telemetry']})")
+        print("serving_scale smoke OK")
+        return
     if args.smoke and args.chaos:
         cb = run_chaos_probe()
         print(f"serving_scale chaos smoke OK "
@@ -739,6 +926,8 @@ def main() -> None:
             run_update_sweep(duration=args.duration or 240.0)
         if args.chaos:
             run_chaos_probe(duration=args.duration or 240.0)
+        if args.fleet:
+            run_fleet_probe(duration=args.duration or 240.0)
 
 
 if __name__ == "__main__":

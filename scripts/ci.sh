@@ -46,6 +46,14 @@ if [ "${1:-}" = "--chaos" ]; then
     exit $?
 fi
 
+# `bash scripts/ci.sh --fleet` runs ONLY the fleet control-plane gate (fast
+# local loop for FleetState / cohort-event work); the full run includes it.
+if [ "${1:-}" = "--fleet" ]; then
+    echo "== fleet gate: benchmarks.serving_scale --smoke --fleet =="
+    python -m benchmarks.serving_scale --smoke --fleet
+    exit $?
+fi
+
 echo "== tier-1 gate: pytest (minus known env-red modules) =="
 python -m pytest -q \
     --ignore=tests/test_dryrun_small.py
@@ -112,6 +120,16 @@ echo "== chaos smoke: benchmarks.serving_scale --smoke --chaos =="
 python -m benchmarks.serving_scale --smoke --chaos
 chaos_smoke=$?
 
+echo "== fleet smoke: benchmarks.serving_scale --smoke --fleet =="
+# asserts the struct-of-arrays FleetState control plane reproduces the
+# per-object engine bit-for-bit at small n (fair/edf/gain x pool sizes x
+# admission cap x reference FaultPlan, byte-identical FaultPlan.none()
+# traces) and sustains >= 10x the per-object events/sec at 10^4 clients,
+# then sweeps 10^3 -> 10^5 clients (the top point on O(1)-memory moments
+# telemetry) into the fleet section of BENCH_serving.json
+python -m benchmarks.serving_scale --smoke --fleet
+fleet_smoke=$?
+
 echo "== kernel gate: benchmarks.kernels_bench --kernels =="
 # asserts the Pallas serving kernels against their XLA references on the
 # real fused path: byte-identical selection/wire masks, fp16 wire-delta
@@ -121,6 +139,6 @@ echo "== kernel gate: benchmarks.kernels_bench --kernels =="
 python -m benchmarks.kernels_bench --kernels
 kernel_gate=$?
 
-echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke, update smoke exit=$update_smoke, overlap smoke exit=$overlap_smoke, trace smoke exit=$trace_smoke, chaos smoke exit=$chaos_smoke, kernel gate exit=$kernel_gate"
-[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && [ "$update_smoke" -eq 0 ] && [ "$overlap_smoke" -eq 0 ] && [ "$trace_smoke" -eq 0 ] && [ "$chaos_smoke" -eq 0 ] && [ "$kernel_gate" -eq 0 ] && echo "CI OK"
-exit $((tier1 | smoke | pool_smoke | fused_smoke | update_smoke | overlap_smoke | trace_smoke | chaos_smoke | kernel_gate))
+echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke, update smoke exit=$update_smoke, overlap smoke exit=$overlap_smoke, trace smoke exit=$trace_smoke, chaos smoke exit=$chaos_smoke, fleet smoke exit=$fleet_smoke, kernel gate exit=$kernel_gate"
+[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && [ "$update_smoke" -eq 0 ] && [ "$overlap_smoke" -eq 0 ] && [ "$trace_smoke" -eq 0 ] && [ "$chaos_smoke" -eq 0 ] && [ "$fleet_smoke" -eq 0 ] && [ "$kernel_gate" -eq 0 ] && echo "CI OK"
+exit $((tier1 | smoke | pool_smoke | fused_smoke | update_smoke | overlap_smoke | trace_smoke | chaos_smoke | fleet_smoke | kernel_gate))

@@ -87,6 +87,27 @@ whole pool is dead. ``FaultPlan.none()`` (the default) is bit-identical to
 PR-7: no extra events, no RNG draws, byte-identical traces. The reference
 chaos gate lives in ``benchmarks/serving_scale.py --smoke --chaos`` /
 ``scripts/ci.sh --chaos``.
+
+Fleet control plane (`serving.fleet`): at 10^4-10^5 clients the per-object
+path drowns in Python — one heap entry, one dict lookup, one bound-method
+call per client per tick. ``FleetState(n, ...)`` stores the whole stub
+fleet as struct-of-arrays numpy columns and the engine, handed one, switches
+to *cohort events*: clients sharing a timestamp ride a single heap entry
+(`Event.client` becomes an index array, ``Event.n`` its multiplicity) and
+each event kind is handled by one vectorized batch handler. Policies grow an
+array-native ``rank(t, clients=..., ...) -> argsort`` beside the per-object
+``pick``, and admission prices unique parameter rows once and parks by a
+single argsort+cumsum. The contract is **bit-identical results**: same
+events_processed, same mIoU/latency floats, byte-identical flight-recorder
+traces under ``FaultPlan.none()`` — anything the vector path cannot
+reproduce exactly (tracing, chaos, per-link traces) silently drops to the
+scalar lane per cohort. ``telemetry="moments"`` (also on `StubSession`)
+folds per-sample lists into running (count, sum, max) so memory stays O(n)
+at 10^5 clients; means then agree to ~1 ulp rather than bit-for-bit. The
+gate lives in ``benchmarks/serving_scale.py --smoke --fleet`` /
+``scripts/ci.sh --fleet``; the ``fleet`` section of BENCH_serving.json
+records the 10^3 -> 10^5 sweep (events/sec, RSS) and the measured
+fleet-vs-per-object throughput ratio at 10^4.
 """
 from repro.serving.engine import ServingConfig, ServingEngine
 from repro.serving.events import Event, EventQueue
@@ -97,6 +118,7 @@ from repro.serving.faults import (
     OutageWindow,
     SlowdownWindow,
 )
+from repro.serving.fleet import FleetSessionView, FleetState
 from repro.serving.network import ClientNetwork, Link, LinkSpec, RateTrace
 from repro.serving.obs import (
     MetricsRegistry,
@@ -140,4 +162,5 @@ __all__ = [
     "validate_trace",
     "FaultPlan", "FaultInjector", "OutageWindow", "CrashWindow",
     "SlowdownWindow", "RateTrace",
+    "FleetState", "FleetSessionView",
 ]

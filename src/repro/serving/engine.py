@@ -77,9 +77,11 @@ from repro.core.batched import update_pipeline_info
 from repro.core.scheduler import GPUCostModel
 from repro.serving.events import EventQueue
 from repro.serving.faults import FaultInjector, FaultPlan
+from repro.serving.fleet import FleetState
 from repro.serving.obs import (PID_SERVER, TID_DOWN, MetricsRegistry,
                                drift_report)
-from repro.serving.policies import GPURequest, SchedulingPolicy, make_policy
+from repro.serving.policies import (Assignment, GPURequest, SchedulingPolicy,
+                                    make_policy)
 from repro.serving.resources import GPUPool, MigrationModel, StreamModel
 from repro.serving.session import train_many
 
@@ -173,7 +175,15 @@ class ServingEngine:
                  cfg: ServingConfig | None = None,
                  pool: GPUPool | None = None,
                  tracer=None):
-        self.sessions = list(sessions)
+        if isinstance(sessions, FleetState):
+            # fleet mode: struct-of-arrays storage; `self.sessions` is a
+            # lazy sequence of per-client flyweight views, so every scalar
+            # path below runs unchanged against the arrays
+            self.fleet = sessions
+            self.sessions = sessions.views()
+        else:
+            self.fleet = None
+            self.sessions = list(sessions)
         self.policy = make_policy(policy)
         self.cost = cost or GPUCostModel()
         self.cfg = cfg or ServingConfig()
@@ -197,6 +207,21 @@ class ServingEngine:
             "delta_retx": self._on_delta_retx,
             "crash": self._on_crash, "recover": self._on_recover,
             "watchdog": self._on_watchdog}
+        # fleet mode only: handlers for cohort events (Event.client is an
+        # ndarray of client ids sharing one (time, kind))
+        self._batch_handlers = {
+            "sample": self._on_sample_batch, "eval": self._on_eval_batch,
+            "upload": self._on_upload_batch,
+            "request": self._on_request_batch}
+        # vectorized policy path: one `rank` call over parallel request
+        # arrays replaces the per-grant pick loop. Only sound when the
+        # policy keeps the base `assign`/`place` (AffinityAware's joint
+        # assignment, for one, must keep its own loop)
+        self._ranked_assign = (
+            self.fleet is not None
+            and type(self.policy).assign is SchedulingPolicy.assign
+            and type(self.policy).place is SchedulingPolicy.place
+            and type(self.policy).rank is not SchedulingPolicy.rank)
         # fault injection (serving.faults). Like tracing, every hook is
         # behind the `_chaos` flag, so a fault-free plan does no extra work,
         # pushes no extra events, and keeps the schedule bit-identical
@@ -286,6 +311,9 @@ class ServingEngine:
         lowest-φ (near-static) sessions that get *parked* — they run
         inference-only on stale weights; their accuracy decay is the
         saturation signal, not a crash."""
+        if self.fleet is not None:
+            self._admit_fleet()
+            return
         cap = self.cfg.admission_util_cap
         budget = None if cap is None else cap * self.pool.n
         rho = []
@@ -339,6 +367,58 @@ class ServingEngine:
                 load += rho[i]
         self.offered_load = load
 
+    def _admit_fleet(self) -> None:
+        """`_admit_sessions` over the fleet arrays. Demand is priced once
+        per *unique* (rate, T_update, K, delta-hint) row using the same
+        scalar cost-model calls the per-object loop makes — bit-identical
+        by construction, no float-formula mirroring — then scattered back.
+        Parking is one stable argsort by (-φ, idx) plus a cumsum: the
+        parked set is a *suffix* of a total strict-priority order and the
+        load sum is sequential, so an argpartition (no total order, pairwise
+        sums) could not reproduce the per-object books."""
+        f, cfg = self.fleet, self.cfg
+        cap = cfg.admission_util_cap
+        budget = None if cap is None else cap * self.pool.n
+        cols = np.column_stack([f.sampling_rate, f.t_update,
+                                f.k_iters.astype(np.float64),
+                                f.delta_bytes.astype(np.float64)])
+        rows, inv = np.unique(cols, axis=0, return_inverse=True)
+        fuse = max(cfg.fuse_train, 1)
+        rho_u = np.empty(len(rows))
+        for j, (s_rate, t_upd, k, hint) in enumerate(rows):
+            k, hint = int(k), int(hint)
+            est_frames = s_rate * t_upd
+            if cfg.batch_labeling:
+                label_s = self.cost.label_batch_s(est_frames)
+            else:
+                label_s = est_frames * self.cost.teacher_infer_s
+            if fuse > 1:
+                train_s = self.cost.train_batch_s(fuse, k) / fuse
+            else:
+                train_s = k * self.cost.train_iter_s
+            if fuse > 1 and cfg.fuse_updates:
+                update_s = self.cost.update_batch_s([hint] * fuse) / fuse
+            else:
+                update_s = self.cost.update_solo_s(hint)
+            demand = cfg.streams.stream_demand_s(label_s,
+                                                 train_s + update_s)
+            rho_u[j] = demand / max(t_upd, 1e-9)
+        rho = rho_u[inv]
+        if budget is None:
+            f.admitted[:] = True
+            # cumsum is a sequential scan — same IEEE addition order as the
+            # per-object `load += rho[i]` loop (np.sum's pairwise tree isn't)
+            self.offered_load = float(np.cumsum(rho)[-1]) if len(rho) else 0.0
+            return
+        order = np.argsort(-f.phi, kind="stable")  # (-φ, idx) ascending
+        csum = np.cumsum(rho[order])
+        over = csum > budget
+        first_bad = int(np.argmax(over)) if over.any() else len(order)
+        adm = np.zeros(f.n, dtype=bool)
+        adm[order[:first_bad]] = True
+        f.admitted[:] = adm
+        self.offered_load = float(csum[first_bad - 1]) if first_bad else 0.0
+
     # ---- event handlers ------------------------------------------------
     def _on_sample(self, ev) -> None:
         s = self.sessions[ev.client]
@@ -355,17 +435,20 @@ class ServingEngine:
             self.q.push(nxt, "eval", ev.client)
 
     def _on_upload(self, ev) -> None:
-        s = self.sessions[ev.client]
+        self._upload_one(ev.time, ev.client)
+
+    def _upload_one(self, t: float, client: int) -> None:
+        s = self.sessions[client]
         idxs = s.take_outbox()
         nbytes = s.upload_bytes(len(idxs))
         if self._chaos:
-            self._try_upload(ev.time, ev.client, idxs, nbytes, 0)
+            self._try_upload(t, client, idxs, nbytes, 0)
         else:
-            arrival = s.net.send_up(ev.time, nbytes)
-            self.q.push(arrival, "request", ev.client, (idxs, nbytes))
-        nxt = ev.time + s.t_update
+            arrival = s.net.send_up(t, nbytes)
+            self.q.push(arrival, "request", client, (idxs, nbytes))
+        nxt = t + s.t_update
         if nxt < self.cfg.duration:
-            self.q.push(nxt, "upload", ev.client)
+            self.q.push(nxt, "upload", client)
 
     def _try_upload(self, t: float, client: int, idxs, nbytes: int,
                     attempt: int) -> None:
@@ -418,6 +501,115 @@ class ServingEngine:
                          state_bytes=getattr(s, "state_bytes", 0),
                          upload_nbytes=int(nbytes))
         self._enqueue(ev.time, req, list(idxs))
+
+    # ---- fleet cohort handlers ------------------------------------------
+    # A cohort event carries an ndarray of client ids sharing one (time,
+    # kind); the handlers update whole array slices and re-group the
+    # follow-on events into cohorts by their (identical-within-group) next
+    # timestamps. Every expression mirrors its scalar twin operand-for-
+    # operand, and every cohort is pushed in ascending client order, so the
+    # (time, seq) pop sequence — and therefore the schedule — is the one
+    # the per-object engine produces.
+    def _push_cohorts(self, times: np.ndarray, kind: str,
+                      clients: np.ndarray, payload_arrays=None) -> None:
+        """Push per-client events grouped into cohorts of equal timestamp,
+        ascending in time (matching the seq order a scalar loop over the
+        same clients would assign)."""
+        if not len(times):
+            return
+        order = np.argsort(times, kind="stable")
+        st = times[order]
+        cuts = np.flatnonzero(st[1:] != st[:-1]) + 1
+        for grp in np.split(order, cuts):
+            payload = (None if payload_arrays is None
+                       else tuple(a[grp] for a in payload_arrays))
+            self.q.push(float(times[grp[0]]), kind, clients[grp], payload)
+
+    def _on_sample_batch(self, t: float, clients: np.ndarray,
+                         payload=None) -> None:
+        f = self.fleet
+        f.outbox_depth[clients] += 1
+        nxt = t + 1.0 / np.maximum(f.effective_rate(clients),
+                                   self.cfg.sample_eps)
+        live = nxt < self.cfg.duration
+        if live.any():
+            self._push_cohorts(nxt[live], "sample", clients[live])
+
+    def _on_eval_batch(self, t: float, clients: np.ndarray,
+                       payload=None) -> None:
+        f = self.fleet
+        vals = np.maximum(0.2, 0.9 - f.dynamics[clients]
+                          * (t - f.last_update_t[clients]))
+        f.record_mious(clients, vals)
+        nxt = t + f.eval_interval_s[clients]
+        live = nxt < self.cfg.duration
+        if live.any():
+            self._push_cohorts(nxt[live], "eval", clients[live])
+
+    def _on_upload_batch(self, t: float, clients: np.ndarray,
+                         payload=None) -> None:
+        f = self.fleet
+        if self._chaos or self.tracer is not None or f.any_link_traces:
+            # chaos retries and trace spans interleave per-client pushes
+            # whose seq assignment the cohort math can't reproduce — take
+            # the exact scalar lane instead (same code as per-object)
+            for c in clients.tolist():
+                self._upload_one(t, c)
+            return
+        depth = f.outbox_depth[clients].copy()
+        f.outbox_depth[clients] = 0
+        nbytes = 256 + depth * f.frame_bytes[clients]
+        f.up_bytes[clients] += nbytes  # ledger + Link.bytes_carried in one
+        f.up_transfers[clients] += 1
+        start = np.maximum(t, f.up_busy[clients])
+        rate = f.up_kbps[clients]
+        tx = np.divide(nbytes * 8.0, rate * 1e3,
+                       out=np.zeros(len(clients)), where=rate > 0)
+        busy = start + tx
+        f.up_busy[clients] = busy
+        self._push_cohorts(busy + f.prop_delay_s[clients], "request",
+                           clients, (depth, nbytes))
+        nxt = t + f.t_update[clients]
+        live = nxt < self.cfg.duration
+        if live.any():
+            self._push_cohorts(nxt[live], "upload", clients[live])
+
+    def _on_request_batch(self, t: float, clients: np.ndarray,
+                          payload) -> None:
+        depths, nbytes = payload
+        cl = clients.tolist()
+        dp = depths.tolist()
+        nb = nbytes.tolist()
+        # bulk tail-drop: with the base (tail-drop) evict rule, no tracer
+        # and no chaos, a full queue whose worst entry still precedes
+        # (t, next client) makes every remaining cohort member its own
+        # victim — account them all at once instead of building a
+        # GPURequest each just to drop it. (The per-object path's
+        # `_refresh_phi` before evict is a no-op for stub fleets: φ is a
+        # configured constant, never an EMA.)
+        fast_drop = (self.tracer is None and not self._chaos
+                     and type(self.policy).evict is SchedulingPolicy.evict)
+        n = len(cl)
+        for i in range(n):
+            if fast_drop and len(self._queue) >= self.cfg.max_queue:
+                worst = max((b.req.t_request, b.req.client)
+                            for b in self._queue)
+                if worst < (t, cl[i]):
+                    k = n - i
+                    self.requests_enqueued.inc(k)
+                    if not self.pool.has_free():
+                        self.deferred.inc(k)
+                    self.dropped_requests.inc(k)
+                    self.dropped_frame_bytes.inc(int(sum(nb[i:])))
+                    return
+            c = cl[i]
+            s = self.sessions[c]
+            req = GPURequest(client=c, t_request=t, n_frames=dp[i],
+                             k_iters=s.k_iters, deadline=t + s.t_update,
+                             phi=_phi_of(s), t_update=s.t_update,
+                             state_bytes=getattr(s, "state_bytes", 0),
+                             upload_nbytes=int(nb[i]))
+            self._enqueue(t, req, [0] * dp[i])
 
     def _enqueue(self, t: float, req: GPURequest, idxs: list) -> None:
         """Admission for a server-side request — fresh arrivals and
@@ -474,8 +666,11 @@ class ServingEngine:
                 ready[c] = b.req
         if not ready:
             return
-        assignments = self.policy.assign(
-            t, list(ready.values()), free, self.pool)
+        if self._ranked_assign:
+            assignments = self._assign_ranked(t, list(ready.values()), free)
+        else:
+            assignments = self.policy.assign(
+                t, list(ready.values()), free, self.pool)
         taken = [a.req for a in assignments]
         for a in assignments:
             riders = []
@@ -499,6 +694,25 @@ class ServingEngine:
             self._start_service(t, backlog, a.gpu, rider_backlogs)
         if self.tracer is not None:
             self._trace_queue(t)
+
+    def _assign_ranked(self, t, reqs, free):
+        """Vectorized policy path: one `rank` call over parallel request
+        arrays replaces the pick-loop, devices are handed out in ascending
+        id order — exactly what base `place` (min of a shrinking free list)
+        does. Stateful policies (fair's turn pointer) advance as if the
+        taken prefix had been picked one by one."""
+        k = len(reqs)
+        clients = np.fromiter((r.client for r in reqs), np.int64, k)
+        t_req = np.fromiter((r.t_request for r in reqs), np.float64, k)
+        deadline = np.fromiter((r.deadline for r in reqs), np.float64, k)
+        phi = np.fromiter((r.phi for r in reqs), np.float64, k)
+        t_upd = np.fromiter((r.t_update for r in reqs), np.float64, k)
+        free_sorted = sorted(free)
+        order = self.policy.rank(t, clients=clients, t_request=t_req,
+                                 deadline=deadline, phi=phi, t_update=t_upd,
+                                 limit=len(free_sorted))
+        return [Assignment(req=reqs[int(j)], gpu=g)
+                for j, g in zip(order, free_sorted)]
 
     def _trace_queue(self, t: float) -> None:
         """Server-process counter tracks: the ready queue in requests and in
@@ -1060,16 +1274,19 @@ class ServingEngine:
     # ---- main loop ------------------------------------------------------
     def _init_events(self) -> None:
         self._admit_sessions()
-        for i, s in enumerate(self.sessions):
-            if self.cfg.asr_ctrl_bytes > 0:
-                # the boot-time rate is already on-device; every *change*
-                # from here on must be delivered over the downlink
-                s.apply_rate_ctrl(s.sampling_rate)
-            self.q.push(0.0, "eval", i)
-            if s.admitted:
-                self.q.push(0.0, "sample", i)
-                self.q.push(min(s.t_update, self.cfg.duration * 0.999),
-                            "upload", i)
+        if self.fleet is not None:
+            self._init_events_fleet()
+        else:
+            for i, s in enumerate(self.sessions):
+                if self.cfg.asr_ctrl_bytes > 0:
+                    # the boot-time rate is already on-device; every *change*
+                    # from here on must be delivered over the downlink
+                    s.apply_rate_ctrl(s.sampling_rate)
+                self.q.push(0.0, "eval", i)
+                if s.admitted:
+                    self.q.push(0.0, "sample", i)
+                    self.q.push(min(s.t_update, self.cfg.duration * 0.999),
+                                "upload", i)
         if self._chaos:
             dur = self.cfg.duration
             for w in self.cfg.faults.crashes:
@@ -1091,6 +1308,22 @@ class ServingEngine:
                             ci, "outage", max(a, 0.0), min(b, dur),
                             {"direction": d})
 
+    def _init_events_fleet(self) -> None:
+        """Cohort twin of the per-session init loop: same events at the
+        same times; samples before uploads (seq order) just as the
+        interleaved scalar pushes would land."""
+        f, cfg = self.fleet, self.cfg
+        if cfg.asr_ctrl_bytes > 0:
+            f.edge_rate[:] = f.sampling_rate
+        all_c = np.arange(f.n, dtype=np.int64)
+        self._push_cohorts(np.zeros(f.n), "eval", all_c)
+        adm = all_c[f.admitted]
+        if len(adm):
+            self._push_cohorts(np.zeros(len(adm)), "sample", adm)
+            self._push_cohorts(np.minimum(f.t_update[adm],
+                                          cfg.duration * 0.999),
+                               "upload", adm)
+
     def _dispatch(self, ev) -> None:
         self._handlers[ev.kind](ev)
 
@@ -1100,9 +1333,21 @@ class ServingEngine:
         self._update_snap = update_pipeline_info()  # process-global counters
         self._timing_snap = timing.snapshot()  # wall-clock stage stats
         t0 = time.time()
-        while self.q:
-            ev = self.q.pop()
-            handlers[ev.kind](ev)
+        if self.fleet is not None:
+            # fleet loop: drain the timestamp in one batch; cohort events
+            # (ndarray client) go to the array handlers, everything else —
+            # grants, deltas, chaos — takes the scalar handlers unchanged
+            batch = self._batch_handlers
+            while self.q:
+                for ev in self.q.pop_batch():
+                    if type(ev.client) is np.ndarray:
+                        batch[ev.kind](ev.time, ev.client, ev.payload)
+                    else:
+                        handlers[ev.kind](ev)
+        else:
+            while self.q:
+                ev = self.q.pop()
+                handlers[ev.kind](ev)
         wall = time.time() - t0
         return self._results(wall)
 
@@ -1113,11 +1358,24 @@ class ServingEngine:
         historical keys and values bit-for-bit."""
         cfg = self.cfg
         m = self.metrics
-        per_client = [float(np.mean(s.mious)) if s.mious else float("nan")
-                      for s in self.sessions]
+        per_client = [s.miou_mean() for s in self.sessions]
         kbps = [s.net.kbps(cfg.duration) for s in self.sessions]
         lat = m.histogram("delta_latency_s")
-        lat.extend(l for s in self.sessions for l in s.delta_latencies)
+        lat_lists = [s.latency_values() for s in self.sessions]
+        if all(v is not None for v in lat_lists):  # telemetry="full"
+            lat.extend(l for v in lat_lists for l in v)
+            lat_mean, lat_max = lat.mean(), lat.max()
+        else:
+            # "moments" sessions fold their samples into running
+            # (count, sum, max) — O(1) memory; the histogram stays empty
+            n_tot, s_tot, mx = 0, 0.0, 0.0
+            for s in self.sessions:
+                c, sm, m_ = s.latency_summary()
+                n_tot += c
+                s_tot += sm
+                mx = max(mx, m_)
+            lat_mean = s_tot / n_tot if n_tot else 0.0
+            lat_max = mx
         n_req = (self.served.value + self.dropped_requests.value
                  + len(self._queue))
         busy_s = sum(d.union_busy_s(cfg.duration) for d in self.pool.devices)
@@ -1170,8 +1428,8 @@ class ServingEngine:
         m.set("per_client_kbps", kbps)
         m.set("mean_up_kbps", float(np.mean([u for u, _ in kbps])))
         m.set("mean_down_kbps", float(np.mean([d for _, d in kbps])))
-        m.set("delta_latency_mean_s", lat.mean())
-        m.set("delta_latency_max_s", lat.max())
+        m.set("delta_latency_mean_s", lat_mean)
+        m.set("delta_latency_max_s", lat_max)
         # fault telemetry (plan-level gauges only exist in chaos runs; the
         # chaos.* counters are always registered and zero without faults)
         if self._chaos:

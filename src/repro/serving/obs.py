@@ -72,7 +72,11 @@ class Span:
 class Tracer:
     """Deterministic Chrome-trace recorder for one engine run."""
 
-    def __init__(self):
+    def __init__(self, max_clients: int = 1000):
+        # per-client span volume scales linearly with the fleet: tracing a
+        # 10⁵-client fleet would emit a multi-GB, unopenable trace, so the
+        # recorder refuses past this cap (raise it explicitly to insist)
+        self.max_clients = max_clients
         self._spans: list[Span] = []
         self._counters: list = []   # (seq, t, pid, name, values)
         self._instants: list = []   # (seq, t, pid, tid, name, args)
@@ -98,6 +102,13 @@ class Tracer:
     def setup_engine(self, pool, sessions, cfg) -> None:
         """Register the run's processes/threads and the trace metadata the
         schema validator reads (stream mode, pool/fleet size)."""
+        if len(sessions) > self.max_clients:
+            raise ValueError(
+                f"refusing to trace {len(sessions)} clients (cap "
+                f"{self.max_clients}): per-client transfer spans would make "
+                f"the trace unopenably large. Trace a small fleet (the "
+                f"schedule is deterministic, so a subsample reproduces), or "
+                f"pass Tracer(max_clients=...) to insist.")
         self.meta = {
             "n_gpus": pool.n,
             "n_clients": len(sessions),

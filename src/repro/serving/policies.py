@@ -36,6 +36,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from repro.core.scheduler import next_in_turn
 
 
@@ -70,6 +72,19 @@ class SchedulingPolicy:
 
     def pick(self, t_now: float, ready: list[GPURequest]) -> GPURequest:
         """Rank the ready queue: who is most deserving of the next grant?"""
+        raise NotImplementedError
+
+    def rank(self, t_now: float, *, clients: np.ndarray,
+             t_request: np.ndarray, deadline: np.ndarray, phi: np.ndarray,
+             t_update: np.ndarray, limit: int | None = None) -> np.ndarray:
+        """Vectorized ranking over parallel request-field arrays (the
+        engine's fleet path): return up to ``limit`` positions, best first
+        — the exact sequence repeated `pick` would produce over the
+        corresponding `GPURequest` list, which stays the reference (and
+        the non-fleet) path. Assumes at most one request per client, which
+        the engine's ready set guarantees. Policies without an array form
+        (or with stateful pick logic that can't be replayed) simply don't
+        override this, and the engine keeps the pick-loop."""
         raise NotImplementedError
 
     def place(self, t_now: float, req: GPURequest, free: list[int],
@@ -164,12 +179,38 @@ class FairRoundRobin(SchedulingPolicy):
         return min((r for r in ready if r.client == nxt),
                    key=lambda r: (r.t_request, r.deadline, r.n_frames))
 
+    def rank(self, t_now: float, *, clients: np.ndarray,
+             t_request: np.ndarray, deadline: np.ndarray, phi: np.ndarray,
+             t_update: np.ndarray, limit: int | None = None) -> np.ndarray:
+        # repeated pick over a fixed ready set IS ring order from the turn
+        # pointer: the winner is the ring-first waiting client, and the next
+        # pick starts just past it — which is the next one in the same ring
+        # order (distinct clients have distinct ring positions, so one
+        # argsort replays the whole rotation). The turn advances as if the
+        # taken prefix had been picked one by one.
+        n = max(self.n_clients, int(clients.max()) + 1, 1)
+        self.n_clients = n
+        order = np.argsort((clients - self.turn) % n, kind="stable")
+        if limit is not None:
+            order = order[:limit]
+        if len(order):
+            self.turn = int(clients[order[-1]]) + 1
+        return order
+
 
 class EarliestDeadlineFirst(SchedulingPolicy):
     name = "edf"
 
     def pick(self, t_now: float, ready: list[GPURequest]) -> GPURequest:
         return min(ready, key=lambda r: (r.deadline, r.client, r.t_request))
+
+    def rank(self, t_now: float, *, clients: np.ndarray,
+             t_request: np.ndarray, deadline: np.ndarray, phi: np.ndarray,
+             t_update: np.ndarray, limit: int | None = None) -> np.ndarray:
+        # lexsort keys are least-significant first: (deadline, client,
+        # t_request) ascending, same tuple `pick` minimizes
+        order = np.lexsort((t_request, clients, deadline))
+        return order if limit is None else order[:limit]
 
 
 @dataclass
@@ -194,6 +235,19 @@ class GainAware(SchedulingPolicy):
         # max score; ties broken by client id for determinism
         return max(ready, key=lambda r: (self._score(t_now, r), -r.client,
                                          -r.t_request))
+
+    def rank(self, t_now: float, *, clients: np.ndarray,
+             t_request: np.ndarray, deadline: np.ndarray, phi: np.ndarray,
+             t_update: np.ndarray, limit: int | None = None) -> np.ndarray:
+        # same expression as `_score`, elementwise (same IEEE ops, so the
+        # scores — and any ties — are bit-identical to the pick loop)
+        waited = np.maximum(t_now - t_request, 0.0)
+        score = phi + self.staleness_weight * waited / np.maximum(t_update,
+                                                                  1e-9)
+        # descending score, then ascending client and t_request — the
+        # ascending lexsort of (-score, client, t_request)
+        order = np.lexsort((t_request, clients, -score))
+        return order if limit is None else order[:limit]
 
     def evict(self, t_now: float, overfull: list[GPURequest]) -> GPURequest:
         return min(overfull, key=lambda r: (self._score(t_now, r), r.client))

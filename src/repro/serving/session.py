@@ -74,6 +74,22 @@ class SessionBase:
         self.phase_devices.append(gid)
         self.phase_streams.append(stream)
 
+    # ---- telemetry folds (what the engine's results read) ---------------
+    # Sessions that fold samples into running moments instead of lists
+    # (StubSession(telemetry="moments"), fleet views) override these; the
+    # defaults read the lists, bit-identical to the historical inline code.
+    def miou_mean(self) -> float:
+        return float(np.mean(self.mious)) if self.mious else float("nan")
+
+    def latency_values(self):
+        """Per-delta latency samples, or None when only moments are kept."""
+        return self.delta_latencies
+
+    def latency_summary(self) -> tuple[int, float, float]:
+        vals = self.delta_latencies
+        return (len(vals), float(sum(vals)),
+                float(max(vals)) if vals else 0.0)
+
 
 class SegServingSession(SessionBase):
     """One edge device streaming a `SegWorld` video through a real
@@ -180,8 +196,21 @@ class StubSession(SessionBase):
                  k_iters: int = 20, rate: float = 1.0, dynamics: float = 0.01,
                  frame_bytes: int = 7000, delta_bytes: int = 20_000,
                  state_bytes: int = 32_000_000, eval_stride: int = 6,
-                 net: ClientNetwork | None = None):
+                 net: ClientNetwork | None = None,
+                 telemetry: str = "full"):
         super().__init__(idx, net)
+        if telemetry not in ("full", "moments"):
+            raise ValueError("telemetry must be 'full' or 'moments', "
+                             f"got {telemetry!r}")
+        # "full" keeps every mIoU/latency sample (bit-identical, the
+        # default); "moments" folds them into running (count, sum, max)
+        # so a huge fleet stops accumulating unbounded Python lists
+        self.telemetry = telemetry
+        self._m_n = 0
+        self._m_sum = 0.0
+        self._lat_n = 0
+        self._lat_sum = 0.0
+        self._lat_max = 0.0
         self.state_bytes = state_bytes  # modeled weights+opt+buffer residency
         self.fps = fps
         self.sampling_rate = rate
@@ -204,11 +233,38 @@ class StubSession(SessionBase):
 
     def evaluate(self, t: float) -> None:
         staleness = t - self._last_update_t
-        self.mious.append(max(0.2, 0.9 - self.dynamics * staleness))
+        v = max(0.2, 0.9 - self.dynamics * staleness)
+        if self.telemetry == "full":
+            self.mious.append(v)
+        else:
+            self._m_n += 1
+            self._m_sum += v
 
     def apply_delta(self, delta, t_sent: float, t_now: float) -> None:
         self._last_update_t = t_now
-        self.delta_latencies.append(t_now - t_sent)
+        lat = t_now - t_sent
+        if self.telemetry == "full":
+            self.delta_latencies.append(lat)
+        else:
+            self._lat_n += 1
+            self._lat_sum += lat
+            if lat > self._lat_max:
+                self._lat_max = lat
+
+    def miou_mean(self) -> float:
+        if self.telemetry == "full":
+            return super().miou_mean()
+        return self._m_sum / self._m_n if self._m_n else float("nan")
+
+    def latency_values(self):
+        if self.telemetry == "full":
+            return self.delta_latencies
+        return None
+
+    def latency_summary(self) -> tuple[int, float, float]:
+        if self.telemetry == "full":
+            return super().latency_summary()
+        return (self._lat_n, self._lat_sum, self._lat_max)
 
     def label_and_ingest(self, idxs: list[int], t: float) -> None:
         self._ingested += len(idxs)
@@ -240,7 +296,8 @@ def train_many(sessions: list, t: float) -> list:
             if d is not None:
                 sessions[i].phases += 1
             out[i] = d
-        rest = [i for i in rest if i not in set(fusable)]
+        fused = set(fusable)  # hoisted: rebuilding per element made this O(B²)
+        rest = [i for i in rest if i not in fused]
     for i in rest:
         out[i] = sessions[i].train(t)
     return out

@@ -1,0 +1,308 @@
+"""Fleet control plane (PR 9): the struct-of-arrays `FleetState` path must
+reproduce the per-object engine bit-for-bit — same results dict (minus
+wall-clock fields), byte-identical traces — across policies, pool sizes,
+admission parking, stream models and the chaos fault injector; cohort
+events must preserve the queue's (time, seq) semantics; vectorized policy
+``rank`` must order exactly like repeated per-object ``pick``; and the
+O(1)-memory ``moments`` telemetry must agree with full telemetry to float
+tolerance."""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # hypothesis, or a fallback when absent
+
+from repro.serving import (
+    ClientNetwork,
+    CrashWindow,
+    EventQueue,
+    FaultPlan,
+    FleetState,
+    GPURequest,
+    LinkSpec,
+    ServingConfig,
+    ServingEngine,
+    StreamModel,
+    StubSession,
+    Tracer,
+    make_policy,
+)
+
+# results fields that legitimately differ run-to-run (wall clock) or by
+# representation (observability carries measured stage timings)
+DROP = ("wall_s", "events_per_sec", "events_per_sec_steady", "observability")
+
+
+def _core(r: dict) -> dict:
+    return {k: v for k, v in r.items() if k not in DROP}
+
+
+def _stub_fleet(n: int, telemetry: str = "full") -> list[StubSession]:
+    link = LinkSpec(up_kbps=500.0, down_kbps=2000.0)
+    out = []
+    for i in range(n):
+        static = i < n // 3
+        out.append(StubSession(
+            i,
+            rate=0.15 if static else 1.0,
+            dynamics=0.0005 if static else 0.004,
+            net=ClientNetwork(link),
+            telemetry=telemetry,
+        ))
+    return out
+
+
+def _fleet_state(n: int, telemetry: str = "full") -> FleetState:
+    static = np.arange(n) < n // 3
+    return FleetState(
+        n,
+        rate=np.where(static, 0.15, 1.0),
+        dynamics=np.where(static, 0.0005, 0.004),
+        up_kbps=500.0, down_kbps=2000.0,
+        telemetry=telemetry,
+    )
+
+
+def _pair(n: int, policy: str = "fair", duration: float = 40.0,
+          telemetry: str = "full", tracers: bool = False, **cfg_kw):
+    cfg = ServingConfig(duration=duration, max_queue=16, **cfg_kw)
+    t1 = Tracer() if tracers else None
+    t2 = Tracer() if tracers else None
+    r_obj = ServingEngine(_stub_fleet(n), policy=policy, cfg=cfg,
+                          tracer=t1).run()
+    r_fl = ServingEngine(_fleet_state(n, telemetry=telemetry), policy=policy,
+                         cfg=cfg, tracer=t2).run()
+    return r_obj, r_fl, t1, t2
+
+
+# ---------------- bit-identical equivalence ----------------
+
+
+@pytest.mark.parametrize("policy", ["fair", "edf", "gain"])
+@pytest.mark.parametrize("n_gpus", [1, 3])
+def test_fleet_matches_per_object(policy, n_gpus):
+    r_obj, r_fl, _, _ = _pair(12, policy=policy, n_gpus=n_gpus)
+    assert _core(r_obj) == _core(r_fl)
+
+
+def test_fleet_matches_under_admission_parking():
+    # cap low enough that the gain-aware parking actually rejects sessions
+    r_obj, r_fl, _, _ = _pair(12, policy="gain", n_gpus=2,
+                              admission_util_cap=0.5)
+    assert r_obj["admitted_clients"] < 12  # the cap must actually bind
+    assert _core(r_obj) == _core(r_fl)
+
+
+def test_fleet_matches_with_fused_training():
+    r_obj, r_fl, _, _ = _pair(12, policy="gain", n_gpus=2, fuse_train=4,
+                              admission_util_cap=0.8)
+    assert _core(r_obj) == _core(r_fl)
+
+
+def test_fleet_matches_with_stream_overlap():
+    streams = StreamModel(mode="overlap", slowdown=1.3, preempt=True)
+    r_obj, r_fl, _, _ = _pair(10, policy="gain", n_gpus=2, streams=streams)
+    assert _core(r_obj) == _core(r_fl)
+
+
+def test_fleet_matches_with_rate_ctrl_messages():
+    r_obj, r_fl, _, _ = _pair(10, policy="fair", asr_ctrl_bytes=64)
+    assert _core(r_obj) == _core(r_fl)
+
+
+def test_fleet_matches_under_lossy_links():
+    plan = FaultPlan(seed=7, up_loss=0.1, down_loss=0.05, max_retries=2)
+    r_obj, r_fl, _, _ = _pair(10, policy="gain", n_gpus=2, faults=plan)
+    assert r_obj["chaos"]["upload_retries"] > 0  # the plan must actually bite
+    assert _core(r_obj) == _core(r_fl)
+
+
+def test_fleet_matches_through_device_crash():
+    plan = dataclasses.replace(
+        FaultPlan(seed=3, up_loss=0.05),
+        crashes=(CrashWindow(gid=1, start=15.0, end=30.0),))
+    r_obj, r_fl, _, _ = _pair(10, policy="gain", n_gpus=2, faults=plan,
+                              duration=60.0)
+    assert _core(r_obj) == _core(r_fl)
+
+
+def test_fleet_trace_bytes_identical():
+    # the flight recorder forces the scalar lane per cohort; the bytes it
+    # writes must be indistinguishable from a per-object run
+    r_obj, r_fl, t1, t2 = _pair(8, policy="gain", n_gpus=2, tracers=True,
+                                faults=FaultPlan.none())
+    assert _core(r_obj) == _core(r_fl)
+    assert t1.to_json() == t2.to_json()
+
+
+# ---------------- cohort event queue ----------------
+
+
+def test_push_many_pops_like_repeated_push():
+    items = [(3.0, "a", 1, None), (1.0, "b", 2, None), (1.0, "c", 3, None),
+             (2.0, "d", 4, None), (1.0, "e", 5, None)]
+    q1, q2 = EventQueue(), EventQueue()
+    for t, k, c, p in items:
+        q1.push(t, k, c, p)
+    q2.push_many(items)
+    got1 = [(e.time, e.seq, e.kind) for e in (q1.pop() for _ in range(5))]
+    got2 = [(e.time, e.seq, e.kind) for e in (q2.pop() for _ in range(5))]
+    assert got1 == got2
+
+
+def test_push_many_after_existing_heap():
+    # exercise both branches of the heapify-vs-push heuristic
+    q = EventQueue()
+    for i in range(64):
+        q.push(float(i), "seed")
+    q.push_many([(0.5, "small", None, None)])  # small batch: sift-up path
+    q.push_many([(float(i) + 0.25, "bulk", None, None)
+                 for i in range(64)])  # large batch: heapify path
+    times = []
+    while q:
+        times.append(q.pop().time)
+    assert times == sorted(times)
+
+
+def test_pop_batch_drains_min_timestamp_in_seq_order():
+    q = EventQueue()
+    q.push(2.0, "later")
+    q.push(1.0, "a")
+    q.push(1.0, "b")
+    q.push(1.0, "c")
+    batch = q.pop_batch()
+    assert [e.kind for e in batch] == ["a", "b", "c"]
+    assert q.peek_time() == 2.0
+
+
+def test_cohort_events_count_logical_multiplicity():
+    q = EventQueue()
+    cohort = np.arange(5, dtype=np.int64)
+    ev = q.push(1.0, "sample", cohort)
+    assert ev.n == 5
+    assert q.pushed == 5
+    q.push(1.0, "eval", 3)  # scalar rides the same timestamp
+    batch = q.pop_batch()
+    assert len(batch) == 2  # two heap entries...
+    assert q.popped == 6  # ...but six logical events
+
+
+# ---------------- vectorized rank vs per-object pick ----------------
+
+
+def _requests(rng, n):
+    return [GPURequest(client=i, t_request=float(rng.uniform(0, 10)),
+                       n_frames=1, k_iters=20,
+                       deadline=float(rng.uniform(10, 30)),
+                       phi=float(rng.uniform(0.1, 1.5)),
+                       t_update=float(rng.choice([5.0, 10.0, 20.0])))
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("policy", ["fair", "edf", "gain"])
+@pytest.mark.parametrize("limit", [1, 3, 8])
+def test_rank_orders_exactly_like_repeated_pick(policy, limit):
+    rng = np.random.default_rng(hash(policy) % 2**32)
+    reqs = _requests(rng, 8)
+    t_now = 12.0
+
+    p_pick = make_policy(policy)
+    ready = list(reqs)
+    picked = []
+    for _ in range(min(limit, len(ready))):
+        r = p_pick.pick(t_now, ready)
+        ready.remove(r)
+        picked.append(r.client)
+
+    p_rank = make_policy(policy)
+    order = p_rank.rank(
+        t_now,
+        clients=np.array([r.client for r in reqs], dtype=np.int64),
+        t_request=np.array([r.t_request for r in reqs]),
+        deadline=np.array([r.deadline for r in reqs]),
+        phi=np.array([r.phi for r in reqs]),
+        t_update=np.array([r.t_update for r in reqs]),
+        limit=limit)
+    assert [reqs[int(j)].client for j in order] == picked
+    if policy == "fair":  # the ring pointer must advance identically
+        assert p_rank.turn == p_pick.turn
+
+
+def test_fair_rank_round_robin_across_calls():
+    # the turn pointer carries between batches exactly as with pick
+    p = make_policy("fair")
+    clients = np.array([0, 1, 2, 3], dtype=np.int64)
+    zeros = np.zeros(4)
+    first = p.rank(0.0, clients=clients, t_request=zeros, deadline=zeros,
+                   phi=zeros, t_update=zeros, limit=2)
+    assert [int(clients[j]) for j in first] == [0, 1]
+    second = p.rank(0.0, clients=clients, t_request=zeros, deadline=zeros,
+                    phi=zeros, t_update=zeros, limit=2)
+    assert [int(clients[j]) for j in second] == [2, 3]
+
+
+# ---------------- telemetry modes ----------------
+
+
+def test_stub_moments_telemetry_matches_full_to_tolerance():
+    cfg = ServingConfig(duration=40.0, max_queue=16)
+    r_full = ServingEngine(_stub_fleet(8, "full"), cfg=cfg).run()
+    r_mom = ServingEngine(_stub_fleet(8, "moments"), cfg=cfg).run()
+    assert r_mom["mean_miou"] == pytest.approx(r_full["mean_miou"], abs=1e-12)
+    assert r_mom["delta_latency_mean_s"] == pytest.approx(
+        r_full["delta_latency_mean_s"], abs=1e-12)
+    assert r_mom["delta_latency_max_s"] == r_full["delta_latency_max_s"]
+    assert r_mom["events_processed"] == r_full["events_processed"]
+
+
+def test_fleet_moments_telemetry_matches_full_to_tolerance():
+    cfg = ServingConfig(duration=40.0, max_queue=16)
+    r_full = ServingEngine(_fleet_state(8, "full"), cfg=cfg).run()
+    r_mom = ServingEngine(_fleet_state(8, "moments"), cfg=cfg).run()
+    assert r_mom["mean_miou"] == pytest.approx(r_full["mean_miou"], abs=1e-12)
+    assert r_mom["delta_latency_mean_s"] == pytest.approx(
+        r_full["delta_latency_mean_s"], abs=1e-12)
+    assert r_mom["events_processed"] == r_full["events_processed"]
+
+
+def test_moments_session_reports_no_per_sample_values():
+    s = StubSession(0, telemetry="moments")
+    s.evaluate(5.0)
+    s.apply_delta(None, 1.0, 2.0)
+    assert s.latency_values() is None
+    assert s.latency_summary() == (1, 1.0, 1.0)
+    assert s.miou_mean() == pytest.approx(0.9 - 0.01 * 5.0)
+
+
+def test_bad_telemetry_mode_rejected():
+    with pytest.raises(ValueError, match="telemetry"):
+        StubSession(0, telemetry="verbose")
+    with pytest.raises(ValueError, match="telemetry"):
+        FleetState(4, telemetry="verbose")
+
+
+# ---------------- tracer fleet-size guard ----------------
+
+
+def test_tracer_refuses_huge_fleets():
+    with pytest.raises(ValueError, match="refusing to trace"):
+        ServingEngine(_fleet_state(5), tracer=Tracer(max_clients=4),
+                      cfg=ServingConfig(duration=1.0))
+    # opting in raises the cap
+    ServingEngine(_fleet_state(5), tracer=Tracer(max_clients=8),
+                  cfg=ServingConfig(duration=1.0))
+
+
+# ---------------- property: equivalence over random configs ----------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=2, max_value=14),
+       n_gpus=st.integers(min_value=1, max_value=3),
+       policy=st.sampled_from(["fair", "edf", "gain"]),
+       capped=st.booleans())
+def test_fleet_equivalence_property(n, n_gpus, policy, capped):
+    cap = 0.6 if capped else None
+    r_obj, r_fl, _, _ = _pair(n, policy=policy, duration=25.0,
+                              n_gpus=n_gpus, admission_util_cap=cap)
+    assert _core(r_obj) == _core(r_fl)

@@ -14,21 +14,11 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# Environment hygiene (the discipline the exemplar JAX serving setups use):
-# silence the TF/XLA C++ log spew that drowns the gate's own output, and
-# prefer tcmalloc when it is actually present — glibc malloc fragments the
-# long-lived benchmark processes, but an unconditional LD_PRELOAD breaks
-# every subprocess on hosts without it.
-export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
-if [ -z "${LD_PRELOAD:-}" ]; then
-    for _tcm in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
-                /usr/lib/libtcmalloc.so.4; do
-        if [ -f "$_tcm" ]; then
-            export LD_PRELOAD="$_tcm"
-            break
-        fi
-    done
-fi
+# Environment hygiene lives in scripts/env.sh (sourceable on its own for
+# accelerator hosts / one-off shells): TF log silencing, guarded tcmalloc
+# preload, and — when REPRO_HOST_DEVICES is set — the XLA_FLAGS forced
+# host-platform device count the sharded gate runs under.
+. "$(dirname "$0")/env.sh"
 
 # `bash scripts/ci.sh --kernels` runs ONLY the Pallas kernel gate (fast
 # local loop for kernel work); the full run includes it as its last gate.
@@ -51,6 +41,17 @@ fi
 if [ "${1:-}" = "--fleet" ]; then
     echo "== fleet gate: benchmarks.serving_scale --smoke --fleet =="
     python -m benchmarks.serving_scale --smoke --fleet
+    exit $?
+fi
+
+# `bash scripts/ci.sh --sharded` runs ONLY the sharded-execution gate in a
+# child process with 4 forced host devices (the flag must be set before
+# jax initializes, so it cannot ride inside an already-warm process); the
+# full run includes it below.
+if [ "${1:-}" = "--sharded" ]; then
+    echo "== sharded gate: benchmarks.serving_scale --smoke --sharded (4 host devices) =="
+    XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=4" \
+        python -m benchmarks.serving_scale --smoke --sharded
     exit $?
 fi
 
@@ -130,6 +131,19 @@ echo "== fleet smoke: benchmarks.serving_scale --smoke --fleet =="
 python -m benchmarks.serving_scale --smoke --fleet
 fleet_smoke=$?
 
+echo "== sharded smoke: benchmarks.serving_scale --smoke --sharded (4 host devices) =="
+# asserts, with 4 forced host-platform devices (scripts/env.sh), that the
+# sharded fused path (train_phases_sharded over GPUPool device_backend=jax)
+# reproduces the single-device modeled path — selection/wire masks
+# byte-identical, fp16 wire deltas within 1 ULP, per-device dispatch
+# byte-identical — and measures sharded-vs-serial wall-clock (the speedup
+# assertion engages only on multi-core hosts; a 1-core container cannot
+# physically run 4 devices in parallel); writes the sharded section of
+# BENCH_serving.json with the per-device modeled-vs-measured drift
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=4" \
+    python -m benchmarks.serving_scale --smoke --sharded
+sharded_smoke=$?
+
 echo "== kernel gate: benchmarks.kernels_bench --kernels =="
 # asserts the Pallas serving kernels against their XLA references on the
 # real fused path: byte-identical selection/wire masks, fp16 wire-delta
@@ -139,6 +153,6 @@ echo "== kernel gate: benchmarks.kernels_bench --kernels =="
 python -m benchmarks.kernels_bench --kernels
 kernel_gate=$?
 
-echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke, update smoke exit=$update_smoke, overlap smoke exit=$overlap_smoke, trace smoke exit=$trace_smoke, chaos smoke exit=$chaos_smoke, fleet smoke exit=$fleet_smoke, kernel gate exit=$kernel_gate"
-[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && [ "$update_smoke" -eq 0 ] && [ "$overlap_smoke" -eq 0 ] && [ "$trace_smoke" -eq 0 ] && [ "$chaos_smoke" -eq 0 ] && [ "$fleet_smoke" -eq 0 ] && [ "$kernel_gate" -eq 0 ] && echo "CI OK"
-exit $((tier1 | smoke | pool_smoke | fused_smoke | update_smoke | overlap_smoke | trace_smoke | chaos_smoke | fleet_smoke | kernel_gate))
+echo "tier-1 gate exit=$tier1, serving smoke exit=$smoke, pool smoke exit=$pool_smoke, fused smoke exit=$fused_smoke, update smoke exit=$update_smoke, overlap smoke exit=$overlap_smoke, trace smoke exit=$trace_smoke, chaos smoke exit=$chaos_smoke, fleet smoke exit=$fleet_smoke, sharded smoke exit=$sharded_smoke, kernel gate exit=$kernel_gate"
+[ "$tier1" -eq 0 ] && [ "$smoke" -eq 0 ] && [ "$pool_smoke" -eq 0 ] && [ "$fused_smoke" -eq 0 ] && [ "$update_smoke" -eq 0 ] && [ "$overlap_smoke" -eq 0 ] && [ "$trace_smoke" -eq 0 ] && [ "$chaos_smoke" -eq 0 ] && [ "$fleet_smoke" -eq 0 ] && [ "$sharded_smoke" -eq 0 ] && [ "$kernel_gate" -eq 0 ] && echo "CI OK"
+exit $((tier1 | smoke | pool_smoke | fused_smoke | update_smoke | overlap_smoke | trace_smoke | chaos_smoke | fleet_smoke | sharded_smoke | kernel_gate))

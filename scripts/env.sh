@@ -1,0 +1,50 @@
+# Environment hygiene for JAX serving runs. SOURCE this (don't execute):
+#
+#   source scripts/env.sh                       # hygiene only
+#   REPRO_HOST_DEVICES=4 source scripts/env.sh  # + N forced host devices
+#
+# Factored out of scripts/ci.sh so accelerator hosts, cron benchmarks and
+# one-off shells all get the same discipline the exemplar JAX serving
+# setups use (SNIPPETS.md snippets 2-3, the HomebrewNLP/olmax run.sh):
+#
+#  * TF_CPP_MIN_LOG_LEVEL=4  — silence the TF/XLA C++ log spew that
+#    drowns a gate's own output.
+#  * tcmalloc via LD_PRELOAD  — glibc malloc fragments long-lived
+#    benchmark processes; preloaded only when the library actually
+#    exists (an unconditional preload breaks every subprocess on hosts
+#    without it), and never clobbers a caller's own LD_PRELOAD.
+#  * TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD — stops tcmalloc from
+#    narrating every multi-GB arena growth during big stacked launches.
+#  * XLA_FLAGS --xla_force_host_platform_device_count=$REPRO_HOST_DEVICES
+#    — splits one CPU host into N real jax devices. This is what makes
+#    `GPUPool(device_backend="jax")` / `scripts/ci.sh --sharded` exercise
+#    true multi-device placement on a CPU-only box. MUST be exported
+#    before the first jax backend touch: XLA reads the flags exactly
+#    once, so set it here (or via launch.host_mesh.ensure_host_devices
+#    at the very top of a python entry point), not mid-process.
+#
+# Everything respects values the caller already exported.
+
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+if [ -z "${LD_PRELOAD:-}" ]; then
+    for _tcm in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+                /usr/lib/libtcmalloc.so.4; do
+        if [ -f "$_tcm" ]; then
+            export LD_PRELOAD="$_tcm"
+            break
+        fi
+    done
+    unset _tcm
+fi
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+
+# Optional: force an N-device host platform for sharded serving work.
+# Appends to (rather than replaces) any XLA_FLAGS already set, dropping a
+# stale device-count flag first so the surviving value is unambiguous.
+if [ -n "${REPRO_HOST_DEVICES:-}" ]; then
+    _flags="$(printf '%s' "${XLA_FLAGS:-}" \
+        | sed 's/--xla_force_host_platform_device_count=[0-9]*//g')"
+    export XLA_FLAGS="${_flags:+$_flags }--xla_force_host_platform_device_count=${REPRO_HOST_DEVICES}"
+    unset _flags
+fi

@@ -31,11 +31,33 @@ so an accelerator whose scan lowering happens to be slow (or a CPU build
 whose loop dispatch is) is measured, not assumed. ``set_exec_mode`` forces
 either shape (benchmarks/tests); ``auto_mode_info`` exposes the measured
 decisions.
+
+Sharded execution (`train_phases_sharded`): everything above runs on jax's
+*default* device, so co-resident groups granted to different `GPUPool`
+slots still execute serially — the pool's per-device clocks are modeled,
+not measured. With the pool's ``device_backend="jax"`` knob each slot
+binds a concrete ``jax.Device`` (`launch.host_mesh` forces N of them on a
+CPU host), and `train_phases_sharded` runs D groups' fused lifecycles
+(train → stacked select → batched encode) on D devices at once: each
+group's stacked inputs are ``jax.device_put`` onto its slot's device and
+the SAME cached executables dispatch asynchronously — jit keeps one
+compiled program per (device, compile key), so per-device results are
+bit-identical to the single-device fused path. ``spmd=True`` instead
+concatenates uniform groups along the session axis and makes ONE
+GSPMD launch over a cached `launch.mesh.make_session_mesh` sharding
+(`_SHARD_CACHE`, per (mesh devices, compile key) via jit's sharding-aware
+executable cache); one launch, but numerics only to the PR-7 float32
+tolerance contract (masks and wire bytes stay byte-identical). Per-device
+and whole-batch wall-clock land in `core.timing` ("sharded_device" /
+"train_sharded"), which `obs.drift_report` prices per device against the
+`GPUCostModel` — the modeled-vs-measured audit the serving stack's
+capacity numbers hang off.
 """
 from __future__ import annotations
 
 import time
 from collections import defaultdict
+from concurrent.futures import ThreadPoolExecutor
 from typing import Hashable
 
 import jax
@@ -383,7 +405,7 @@ def _group_key(s, mask, frames, labels) -> Hashable:
             tuple(labels.shape), str(labels.dtype))
 
 
-def _stacked_masks(members, force_stack: bool):
+def _stacked_masks(members, force_stack: bool, device=None):
     """The group's stacked mask tree, batching deferred gradient-guided
     selections into one vmapped launch.
 
@@ -393,15 +415,25 @@ def _stacked_masks(members, force_stack: bool):
     B thresholds + B mask trees from one executable instead of B solo
     bisections. Concrete masks (first-phase random, Table-3 ablations)
     stack as-is; a mixed group re-stacks device-side slices (no host
-    round-trip)."""
+    round-trip).
+
+    ``device`` (a ``jax.Device`` or `Sharding`, sharded path only) places
+    the selection on the group's own pool device: an all-deferred group
+    moves the stacked ``u_prev`` there so the bisection launch itself runs
+    on-device; mixed groups select on the default device and only the
+    final stacked mask moves. None (the default) touches placement not at
+    all — bit-identical to the pre-sharding code."""
     deferred = [j for j, m in enumerate(members) if m[2] is None]
     gamma = members[0][1].cfg.gamma
     if len(deferred) >= 2 or (deferred and force_stack):
         u_stack = stack_trees([members[j][1].u_prev for j in deferred])
+        pure = len(deferred) == len(members)
+        if device is not None and pure:
+            u_stack = jax.device_put(u_stack, device)
         stacked_d = selection.stacked_gradient_guided_masks(u_stack, gamma)
         _UPDATE_STATS["stacked_select_launches"] += 1
         _UPDATE_STATS["stacked_select_sessions"] += len(deferred)
-        if len(deferred) == len(members):
+        if pure:
             return stacked_d
         per = {j: jax.tree.map(lambda l, k=k: l[k], stacked_d)
                for k, j in enumerate(deferred)}
@@ -409,11 +441,12 @@ def _stacked_masks(members, force_stack: bool):
         per = {j: selection.gradient_guided_mask(members[j][1].u_prev, gamma)
                for j in deferred}
     masks = [per.get(j, m[2]) for j, m in enumerate(members)]
-    return stack_trees(masks)
+    out = stack_trees(masks)
+    return jax.device_put(out, device) if device is not None else out
 
 
 def train_phases_fused(sessions: list, t_now: float,
-                       force_stack: bool = False) -> list:
+                       force_stack: bool = False, device=None) -> list:
     """Run one training phase for several sessions as fused launches.
 
     Per-session host-side work (replay sampling, ASR/ATR bookkeeping)
@@ -433,6 +466,14 @@ def train_phases_fused(sessions: list, t_now: float,
     Singleton groups take the sequential step path (bitwise-identical to
     ``train_phase``); pass ``force_stack=True`` to push even B=1 through the
     stacked executable (benchmarks/tests only).
+
+    ``device`` places each stacked group's lifecycle on a concrete
+    ``jax.Device`` (the pool slot's binding under
+    ``GPUPool(device_backend="jax")``). Identical jitted programs on
+    same-kind devices produce bit-identical results, so this moves *where*
+    the math runs, not what it computes; the sequential singleton path
+    ignores it (its contract is bitwise equality with ``train_phase`` on
+    the default device). None — the default — performs zero placements.
     """
     results: dict[int, object] = {}
     groups: dict[Hashable, list] = defaultdict(list)
@@ -452,48 +493,344 @@ def train_phases_fused(sessions: list, t_now: float,
                 mask = selection.gradient_guided_mask(s.u_prev, s.cfg.gamma)
             results[i] = s._run_phase_prepared(t_now, mask, frames, labels)
             continue
-        ss = [m[1] for m in members]
-        params = stack_trees([s.params for s in ss])
-        opt = stack_trees([s.opt_state for s in ss])
-        mask = _stacked_masks(members, force_stack)
-        # batches: per-session (K, batch, ...) -> scan-major (K, B, batch, ...)
-        frames = jnp.stack([m[3] for m in members], axis=1)
-        labels = jnp.stack([m[4] for m in members], axis=1)
-        s0 = ss[0]
-        miss0 = _MISSES
-        phase = fused_phase_fn(
-            s0.task.loss_and_grad,
-            struct=tree_struct((params, opt, mask)),
-            k_iters=s0.cfg.k_iters, optimizer=s0.cfg.optimizer,
-            lr=s0.cfg.lr, b1=s0.cfg.b1, b2=s0.cfg.b2, eps=s0.cfg.eps,
-            momentum=s0.cfg.momentum)
-        if timing.enabled():
-            # first launch (a cache miss — including the auto-mode race)
-            # lands in the compile bucket, steady launches in steady-state
-            t0 = time.perf_counter()
-            params, opt, u, losses = phase(params, opt, mask, frames, labels)
-            timing.block((params, opt, u, losses))
-            # nbytes: analytic optimizer-update traffic only (the
-            # masked-Adam roofline term — forward/backward excluded),
-            # B x K x `roofline.analysis.adam_step_hbm_bytes`
-            timing.record("train_fused", time.perf_counter() - t0,
-                          first=_MISSES > miss0,
-                          key=(len(members), s0.cfg.k_iters),
-                          nbytes=(len(members) * s0.cfg.k_iters * 33
-                                  * selection.tree_size(s0.params)))
-        else:
-            params, opt, u, losses = phase(params, opt, mask, frames, labels)
-        losses = np.asarray(losses)
-        b = len(members)
-        deltas = encode_delta_stack(params, mask, b, s0.cfg.value_dtype)
-        _UPDATE_STATS["stacked_encode_launches"] += 1
-        _UPDATE_STATS["stacked_encode_sessions"] += b
-        for j, (i, s, _, _, _), p_j, o_j, u_j in zip(
-                range(b), members, unstack_tree(params, b),
-                unstack_tree(opt, b), unstack_tree(u, b)):
-            # the delta is already encoded (batched), so no per-member mask
-            # slice is ever consumed — don't dispatch B tree-slicings for it
-            results[i] = s._commit_phase(t_now, p_j, o_j, u_j,
-                                         float(losses[j]), None,
-                                         delta=deltas[j])
+        out, _ = _launch_stacked(members, device=device)
+        _commit_stacked(members, t_now, out, results)
     return [results[i] for i in range(len(sessions))]
+
+
+def _batch_spec(device):
+    """Placement for scan-major ``(K, B, ...)`` batches: a session
+    `NamedSharding` names axis 0, but frames/labels carry the session axis
+    at position 1 — shift the spec; a plain Device places the whole leaf."""
+    if isinstance(device, jax.sharding.NamedSharding):
+        return jax.sharding.NamedSharding(
+            device.mesh, jax.sharding.PartitionSpec(None, *device.spec))
+    return device
+
+
+def _launch_stacked(members, device=None, record=True):
+    """Stack one compile-key group and dispatch its fused train launch.
+
+    Returns ``((params, opt, u, losses, mask), first_launch)`` with the
+    arrays still on device (dispatch is async — nothing here blocks unless
+    timing is on, which needs the completed wall-clock; ``record=False``
+    skips the stage record so `train_phases_sharded` can dispatch D groups
+    without a serializing block and clock them itself). ``device`` may be
+    a ``jax.Device`` or a `Sharding`; None keeps the default placement."""
+    ss = [m[1] for m in members]
+    params = stack_trees([s.params for s in ss])
+    opt = stack_trees([s.opt_state for s in ss])
+    mask = _stacked_masks(members, True, device=device)
+    # batches: per-session (K, batch, ...) -> scan-major (K, B, batch, ...)
+    frames = jnp.stack([m[3] for m in members], axis=1)
+    labels = jnp.stack([m[4] for m in members], axis=1)
+    if device is not None:
+        # one placement per tree; the mask already lives there, and every
+        # launch below follows its committed inputs onto the same device
+        params, opt = jax.device_put((params, opt), device)
+        frames, labels = jax.device_put((frames, labels), _batch_spec(device))
+    s0 = ss[0]
+    miss0 = _MISSES
+    phase = fused_phase_fn(
+        s0.task.loss_and_grad,
+        struct=tree_struct((params, opt, mask)),
+        k_iters=s0.cfg.k_iters, optimizer=s0.cfg.optimizer,
+        lr=s0.cfg.lr, b1=s0.cfg.b1, b2=s0.cfg.b2, eps=s0.cfg.eps,
+        momentum=s0.cfg.momentum)
+    if record and timing.enabled():
+        # first launch (a cache miss — including the auto-mode race)
+        # lands in the compile bucket, steady launches in steady-state
+        t0 = time.perf_counter()
+        params, opt, u, losses = phase(params, opt, mask, frames, labels)
+        timing.block((params, opt, u, losses))
+        # nbytes: analytic optimizer-update traffic only (the
+        # masked-Adam roofline term — forward/backward excluded),
+        # B x K x `roofline.analysis.adam_step_hbm_bytes`
+        timing.record("train_fused", time.perf_counter() - t0,
+                      first=_MISSES > miss0,
+                      key=(len(members), s0.cfg.k_iters),
+                      nbytes=(len(members) * s0.cfg.k_iters * 33
+                              * selection.tree_size(s0.params)))
+    else:
+        params, opt, u, losses = phase(params, opt, mask, frames, labels)
+    return (params, opt, u, losses, mask), _MISSES > miss0
+
+
+# ---------------------------------------------------------------------------
+# sharded execution: D co-resident groups on D real pool devices
+# ---------------------------------------------------------------------------
+
+# (mesh device ids) -> session NamedSharding for the one-launch SPMD path.
+# The compiled sharded program itself is cached by jit, which keys
+# executables by (sharding, compile key) — keeping the mesh object stable
+# here is what lets that cache hit; rebuilding a Mesh per call would
+# recompile every launch.
+_SHARD_CACHE: dict = {}
+_SHARD_STATS = {"batches": 0, "groups": 0, "sessions": 0,
+                "dispatch_launches": 0, "spmd_launches": 0,
+                "distinct_devices": 0}
+
+
+def sharded_info() -> dict:
+    """Counters for sharded batches: launches per path (per-device dispatch
+    vs SPMD one-launch), groups/sessions covered, and the widest distinct-
+    device fan-out actually achieved (1 on a one-device host — correctness
+    holds but nothing ran in parallel)."""
+    return dict(_SHARD_STATS)
+
+
+def sharded_reset() -> None:
+    for k in _SHARD_STATS:
+        _SHARD_STATS[k] = 0
+
+
+def _session_sharding(devices):
+    """The cached 1-D session-axis NamedSharding over ``devices``."""
+    key = tuple(id(d) for d in devices)
+    hit = _SHARD_CACHE.get(key)
+    if hit is None:
+        mesh = jax.sharding.Mesh(np.array(devices), axis_names=("session",))
+        hit = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("session"))
+        _SHARD_CACHE[key] = hit
+    return hit
+
+
+def _launch_spmd(members, group_key, shard_b, sharding):
+    """One `shard_map` launch covering D uniform co-resident groups.
+
+    GSPMD cannot partition the vmapped phase along the session axis (vmap
+    lowers the student's convolutions into feature-group form, and XLA
+    refuses to split the group dimension), so the one-launch path maps
+    instead: every mesh device runs the SAME per-group executable the
+    dispatch path uses — shard width = the group's B — over its slice of
+    the session-concatenated stacks. The per-group phase fn must be
+    settled (its exec/kernel races decided) before it can be traced as a
+    shard_map body; an unsettled key is raced once on shard 0's slice
+    first, outputs discarded.
+
+    Returns ``((params, opt, u, losses, mask), first_launch)`` like
+    `_launch_stacked`, with every tree still sharded across the mesh."""
+    from jax.experimental.shard_map import shard_map
+
+    ss = [m[1] for m in members]
+    params = stack_trees([s.params for s in ss])
+    opt = stack_trees([s.opt_state for s in ss])
+    mask = _stacked_masks(members, True, device=sharding)
+    frames = jnp.stack([m[3] for m in members], axis=1)
+    labels = jnp.stack([m[4] for m in members], axis=1)
+    params, opt = jax.device_put((params, opt), sharding)
+    frames, labels = jax.device_put((frames, labels), _batch_spec(sharding))
+    s0 = ss[0]
+    miss0 = _MISSES
+
+    def shard_struct(t):
+        return jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((shard_b,) + l.shape[1:],
+                                           l.dtype), t)
+
+    struct = tree_struct((shard_struct(params), shard_struct(opt),
+                          shard_struct(mask)))
+    fkw = dict(struct=struct, k_iters=s0.cfg.k_iters,
+               optimizer=s0.cfg.optimizer, lr=s0.cfg.lr, b1=s0.cfg.b1,
+               b2=s0.cfg.b2, eps=s0.cfg.eps, momentum=s0.cfg.momentum)
+    base = (s0.task.loss_and_grad, struct, s0.cfg.k_iters, s0.cfg.optimizer,
+            s0.cfg.lr, s0.cfg.b1, s0.cfg.b2, s0.cfg.eps, s0.cfg.momentum)
+    backend = jax.default_backend()
+    settled = ((_EXEC_MODE != "auto" or (backend, base) in _AUTO_MODES)
+               and _resolved_kernel(s0.cfg.optimizer, base) is not None)
+    if not settled:
+        p0, o0, m0 = jax.tree.map(lambda l: l[:shard_b],
+                                  (params, opt, mask))
+        fused_phase_fn(s0.task.loss_and_grad, **fkw)(
+            p0, o0, m0, frames[:, :shard_b], labels[:, :shard_b])
+    fn = fused_phase_fn(s0.task.loss_and_grad, **fkw)
+    key = ("spmd", tuple(id(d) for d in sharding.mesh.devices.flat),
+           group_key, shard_b, id(fn))
+    wrapped = _SHARD_CACHE.get(key)
+    first = wrapped is None or _MISSES > miss0
+    if wrapped is None:
+        spec = jax.sharding.PartitionSpec("session")
+        batch_spec = jax.sharding.PartitionSpec(None, "session")
+        wrapped = jax.jit(shard_map(
+            fn, mesh=sharding.mesh,
+            in_specs=(spec, spec, spec, batch_spec, batch_spec),
+            out_specs=spec))
+        _SHARD_CACHE[key] = wrapped
+    params, opt, u, losses = wrapped(params, opt, mask, frames, labels)
+    return (params, opt, u, losses, mask), first
+
+
+def train_phases_sharded(session_groups: list, t_now: float, *,
+                         devices: list, spmd: bool = False) -> list:
+    """Run D co-resident groups' fused lifecycles on D pool devices at once.
+
+    ``session_groups[g]`` is the member list of one granted pool slot (the
+    sessions a fused grant would stack); ``devices[g]`` is that slot's
+    ``jax.Device`` binding (`GPUPool.jax_devices()` under
+    ``device_backend="jax"``). Host-side phase preparation runs in input
+    order — the same RNG consumption as ``train_phases_fused`` over the
+    concatenation — then every group's stacked train→select launch is
+    placed on its own device and dispatched *asynchronously*: D devices
+    compute concurrently, and one waiter thread per launch timestamps each
+    device's own completion (``block_until_ready`` releases the GIL).
+    Wire deltas and commits follow in group order, one batched
+    device->host encode per group.
+
+    A ``devices`` entry of None dispatches that group on the default
+    device — passing all-None degrades to serial fused execution, which is
+    exactly the baseline the `--sharded` benchmark clocks against. Each
+    group must share ONE compile key (the engine only fuses same-key
+    sessions onto a slot); mixed groups raise.
+
+    ``spmd=True`` runs uniform groups (one compile key, equal B, concrete
+    devices) as ONE `shard_map` launch instead: groups concatenate along
+    the session axis, a cached `_session_sharding` mesh splits the stack
+    across the devices, and every device runs the SAME per-group
+    executable over its shard (`_launch_spmd`). One launch per lifecycle —
+    the accelerator-friendly shape — but the collective-mapped program is
+    a different executable from the solo one, so numerics carry the PR-7
+    tolerance contract (masks/wire bytes byte-identical, fp16 within
+    1 ULP) rather than the per-device dispatch path's bit-identity.
+
+    Timing lands per device ("sharded_device", key=(slot, B, K)) and per
+    batch ("train_sharded"); `obs.drift_report` prices both against the
+    pool's `GPUCostModel` — the per-device modeled-vs-measured audit.
+
+    Returns a list of per-group result lists (delta-or-None per session,
+    ``train_phases_fused`` semantics)."""
+    if len(devices) != len(session_groups):
+        raise ValueError(
+            f"{len(session_groups)} session groups need as many device "
+            f"bindings, got {len(devices)}")
+    results_per: list[dict] = [{} for _ in session_groups]
+    prepped = []
+    for gi, sessions in enumerate(session_groups):
+        members, key0 = [], None
+        for i, s in enumerate(sessions):
+            prep = s._prepare_phase_deferred(t_now)
+            if prep is None:
+                results_per[gi][i] = None
+                continue
+            mask, frames, labels = prep
+            k = _group_key(s, mask, frames, labels)
+            if key0 is None:
+                key0 = k
+            elif k != key0:
+                raise ValueError(
+                    "a sharded group must share ONE compile key (the "
+                    "engine fuses only same-key sessions onto a device); "
+                    "split mixed sessions across slots")
+            members.append((i, s, mask, frames, labels))
+        if members:
+            prepped.append((gi, members, key0))
+
+    timing_on = timing.enabled()
+    if prepped:
+        _SHARD_STATS["batches"] += 1
+        _SHARD_STATS["groups"] += len(prepped)
+        _SHARD_STATS["sessions"] += sum(len(m) for _, m, _ in prepped)
+        _SHARD_STATS["distinct_devices"] = max(
+            _SHARD_STATS["distinct_devices"],
+            len({id(devices[gi]) for gi, _, _ in prepped
+                 if devices[gi] is not None}) or 1)
+    t0 = time.perf_counter()
+
+    if spmd and len(prepped) >= 2:
+        if len({k for _, _, k in prepped}) != 1 \
+                or len({len(m) for _, m, _ in prepped}) != 1:
+            raise ValueError(
+                "spmd one-launch needs uniform groups: one compile key and "
+                "equal B on every device")
+        devs = [devices[gi] for gi, _, _ in prepped]
+        if any(d is None for d in devs):
+            raise ValueError(
+                "spmd needs a concrete jax.Device per group — build the "
+                "pool with device_backend='jax'")
+        # flatten to one big member list with synthetic flat indices, so
+        # the shared commit tail can scatter results back per group
+        flat, slots = [], []
+        for gi, members, _ in prepped:
+            for (i, s, m, f, l) in members:
+                flat.append((len(flat), s, m, f, l))
+                slots.append((gi, i))
+        out, first = _launch_spmd(flat, prepped[0][2], len(prepped[0][1]),
+                                  _session_sharding(devs))
+        _block(out)
+        _SHARD_STATS["spmd_launches"] += 1
+        if timing_on:
+            b = len(prepped[0][1])
+            k0 = flat[0][1].cfg.k_iters
+            timing.record(
+                "train_sharded", time.perf_counter() - t0, first=first,
+                key=(len(prepped), b, k0),
+                nbytes=(len(flat) * k0 * 33
+                        * selection.tree_size(flat[0][1].params)))
+        flat_results: dict = {}
+        _commit_stacked(flat, t_now, out, flat_results)
+        for j, (gi, i) in enumerate(slots):
+            results_per[gi][i] = flat_results[j]
+        return [[results_per[gi].get(i) for i in range(len(sg))]
+                for gi, sg in enumerate(session_groups)]
+
+    launches = []
+    for gi, members, _ in prepped:
+        out, first = _launch_stacked(members, device=devices[gi],
+                                     record=False)
+        launches.append((gi, members, out, first))
+        _SHARD_STATS["dispatch_launches"] += 1
+    if launches:
+        # per-device completion clocks: one waiter thread per launch, each
+        # timestamping its own device's finish (threads, not a serial
+        # block loop — blocking on slot 0 first would fold slot 1's real
+        # finish time into slot 0's wait)
+        def _wait(out):
+            _block(out)
+            return time.perf_counter()
+
+        if len(launches) > 1:
+            with ThreadPoolExecutor(max_workers=len(launches)) as ex:
+                done = list(ex.map(_wait, [l[2] for l in launches]))
+        else:
+            done = [_wait(launches[0][2])]
+        if timing_on:
+            for (gi, members, out, first), t_done in zip(launches, done):
+                s0 = members[0][1]
+                timing.record(
+                    "sharded_device", t_done - t0, first=first,
+                    key=(gi, len(members), s0.cfg.k_iters),
+                    nbytes=(len(members) * s0.cfg.k_iters * 33
+                            * selection.tree_size(s0.params)))
+            bks = {(len(m), m[0][1].cfg.k_iters) for _, m, _, _ in launches}
+            uniform = bks.pop() if len(bks) == 1 else None
+            timing.record(
+                "train_sharded", max(done) - t0,
+                first=any(l[3] for l in launches),
+                key=(len(launches),) + (uniform or ()),
+                nbytes=sum(len(m) * m[0][1].cfg.k_iters * 33
+                           * selection.tree_size(m[0][1].params)
+                           for _, m, _, _ in launches))
+    for gi, members, out, _ in launches:
+        _commit_stacked(members, t_now, out, results_per[gi])
+    return [[results_per[gi].get(i) for i in range(len(sg))]
+            for gi, sg in enumerate(session_groups)]
+
+
+def _commit_stacked(members, t_now, out, results) -> None:
+    """Encode the group's wire deltas (one batched device->host pull) and
+    commit per-member state — the tail every stacked launch shares."""
+    params, opt, u, losses, mask = out
+    losses = np.asarray(losses)
+    b = len(members)
+    s0 = members[0][1]
+    deltas = encode_delta_stack(params, mask, b, s0.cfg.value_dtype)
+    _UPDATE_STATS["stacked_encode_launches"] += 1
+    _UPDATE_STATS["stacked_encode_sessions"] += b
+    for j, (i, s, _, _, _), p_j, o_j, u_j in zip(
+            range(b), members, unstack_tree(params, b),
+            unstack_tree(opt, b), unstack_tree(u, b)):
+        # the delta is already encoded (batched), so no per-member mask
+        # slice is ever consumed — don't dispatch B tree-slicings for it
+        results[i] = s._commit_phase(t_now, p_j, o_j, u_j,
+                                     float(losses[j]), None,
+                                     delta=deltas[j])

@@ -1,0 +1,128 @@
+"""Host-platform device meshes: N real JAX devices on one CPU host.
+
+XLA will split a single host into N independent `CpuDevice`s when
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` is set *before the
+backend initializes* (the trick the exemplar JAX training repos use in
+their run.sh, and what `scripts/env.sh` exports for CI). Each forced
+device owns its own executable cache and buffer space, so work placed on
+different devices genuinely dispatches as separate launches — which is
+exactly what `serving.resources.GPUPool(device_backend="jax")` and
+`core.batched.train_phases_sharded` need to turn modeled per-device
+clocks into measured ones.
+
+Like `launch.mesh`, everything here is a function: importing this module
+never touches jax device state. The only environment-mutating helper,
+`ensure_host_devices`, edits ``XLA_FLAGS`` and is honest about whether
+the edit can still take effect (it cannot once the backend is up — flags
+are read exactly once).
+"""
+from __future__ import annotations
+
+import os
+import re
+
+_FLAG = "--xla_force_host_platform_device_count"
+
+
+def host_device_count_flag(n: int) -> str:
+    """The XLA_FLAGS fragment that forces ``n`` host-platform devices."""
+    if n < 1:
+        raise ValueError(f"need at least one device, got {n}")
+    return f"{_FLAG}={n}"
+
+
+def forced_host_device_count(env: str | None = None) -> int | None:
+    """Parse the forced device count out of ``XLA_FLAGS`` (None if unset).
+
+    `env` overrides ``os.environ['XLA_FLAGS']`` for tests.
+    """
+    flags = os.environ.get("XLA_FLAGS", "") if env is None else env
+    m = None
+    for m in re.finditer(rf"{_FLAG}=(\d+)", flags):
+        pass  # last occurrence wins, matching XLA's own flag parsing
+    return int(m.group(1)) if m else None
+
+
+def _backend_initialized() -> bool:
+    """True once jax has built a backend (flags are frozen from then on)."""
+    try:
+        from jax._src import xla_bridge
+
+        return bool(xla_bridge._backends)
+    except Exception:  # pragma: no cover - private-API drift
+        # Can't tell; assume the worst so callers re-check live devices.
+        return True
+
+
+def ensure_host_devices(n: int) -> bool:
+    """Ask for ``n`` forced host devices via ``XLA_FLAGS``.
+
+    Returns True when the flag is in place *and* can still take effect
+    (jax backend not yet initialized, or already initialized with >= n
+    devices). Returns False when the backend is already up with fewer
+    devices — the process-level flag window has closed, and callers
+    should degrade to the devices that actually exist (or re-exec under
+    `scripts/env.sh`, which exports the flag before python starts).
+    """
+    if n < 1:
+        raise ValueError(f"need at least one device, got {n}")
+    current = forced_host_device_count()
+    if current is None or current < n:
+        flags = os.environ.get("XLA_FLAGS", "")
+        # strip any stale occurrences so the surviving value is unambiguous
+        flags = re.sub(rf"\s*{_FLAG}=\d+", "", flags).strip()
+        os.environ["XLA_FLAGS"] = (flags + " " if flags else "") + \
+            host_device_count_flag(n)
+    if not _backend_initialized():
+        return True
+    import jax
+
+    return len(jax.devices()) >= n
+
+
+def host_devices(n: int | None = None) -> list:
+    """The live device list, optionally truncated to the first ``n``.
+
+    Raises with a pointer at `ensure_host_devices` / `scripts/env.sh`
+    when fewer than ``n`` devices materialized, so a silently-serial
+    "sharded" run can't masquerade as a measured parallel one.
+    """
+    import jax
+
+    devs = list(jax.devices())
+    if n is None:
+        return devs
+    if len(devs) < n:
+        raise RuntimeError(
+            f"asked for {n} host devices but only {len(devs)} exist; "
+            f"export XLA_FLAGS={host_device_count_flag(n)} before jax "
+            f"initializes (source scripts/env.sh, or call "
+            f"launch.host_mesh.ensure_host_devices({n}) at process start)")
+    return devs[:n]
+
+
+def make_host_mesh(n: int | None = None):
+    """A 1-D mesh over the ``session`` axis on ``n`` host devices.
+
+    This is the serving counterpart of `launch.mesh.make_local_mesh`:
+    fused grant lifecycles stack sessions on the leading axis, so the
+    mesh is one-dimensional and the only thing sharded is that axis.
+    """
+    from repro.launch.mesh import make_session_mesh
+
+    return make_session_mesh(n)
+
+
+def session_sharding(mesh):
+    """NamedSharding placing a stacked tree's leading (session) axis."""
+    import jax
+
+    return jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("session"))
+
+
+def replicated_sharding(mesh):
+    """NamedSharding replicating a leaf across the session mesh."""
+    import jax
+
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())

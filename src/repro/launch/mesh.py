@@ -1,7 +1,16 @@
-"""Production meshes (TPU v5e target).
+"""Production meshes (TPU v5e target) and the serving session mesh.
 
 A function, not a module-level constant — importing this module must never
-touch jax device state."""
+touch jax device state.
+
+Two mesh families live here. The training meshes (`make_production_mesh`,
+`make_local_mesh`) are 2-D/3-D ("data", "model") grids for the student
+archs in `launch.shardings`. The serving mesh (`make_session_mesh`) is
+1-D over a "session" axis: fused grant lifecycles (`core.batched`) stack
+co-resident sessions on the leading axis, and sharding *that* axis across
+an N-device host-platform mesh (`launch.host_mesh`, forced with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) is what turns the
+GPU pool's modeled per-device clocks into real parallel launches."""
 from __future__ import annotations
 
 import jax
@@ -17,6 +26,20 @@ def make_local_mesh():
     """Single-device mesh for CPU tests (degenerate axes)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_session_mesh(n: int | None = None):
+    """1-D mesh over the fused-serving "session" axis.
+
+    ``n`` defaults to every live device (forced host devices included);
+    pass an explicit count to pin the pool width. See `launch.host_mesh`
+    for the env plumbing that makes n > 1 real on a CPU host."""
+    if n is None:
+        n = len(jax.devices())
+    if n < 1 or n > len(jax.devices()):
+        raise ValueError(
+            f"session mesh wants {n} devices, have {len(jax.devices())}")
+    return jax.make_mesh((n,), ("session",))
 
 
 # TPU v5e hardware constants (per chip) used by the roofline analysis.

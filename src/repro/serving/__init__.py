@@ -108,6 +108,23 @@ gate lives in ``benchmarks/serving_scale.py --smoke --fleet`` /
 ``scripts/ci.sh --fleet``; the ``fleet`` section of BENCH_serving.json
 records the 10^3 -> 10^5 sweep (events/sec, RSS) and the measured
 fleet-vs-per-object throughput ratio at 10^4.
+
+Sharded execution (`launch.host_mesh` + `core.batched`): the pool's
+modeled per-device parallelism can run on *real* jax devices.
+``GPUPool(device_backend="jax")`` binds every modeled `GPUDevice` to a
+concrete ``jax.Device`` (round-robin over the live backend;
+``"modeled"``, the default, keeps ``jax_device=None`` and is
+bit-identical), and ``core.batched.train_phases_sharded`` executes
+co-resident groups on distinct devices as one multi-device step — either
+per-device async dispatch (byte-identical to the serial fused path) or a
+single ``shard_map`` along the session axis (``spmd=True``, fp16 wire
+deltas within 1 ULP). Force an N-device mesh in a CPU container with
+``REPRO_HOST_DEVICES=N source scripts/env.sh`` (the flag must be set
+before jax initializes — `launch.host_mesh.host_devices` explains when it
+is too late). Per-device measured-vs-modeled seconds surface in
+``obs.drift_report()[...]["per_device"]``; the gate lives in
+``benchmarks/serving_scale.py --smoke --sharded`` /
+``scripts/ci.sh --sharded``.
 """
 from repro.serving.engine import ServingConfig, ServingEngine
 from repro.serving.events import Event, EventQueue

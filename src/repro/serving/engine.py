@@ -128,6 +128,18 @@ class ServingConfig:
     # crash/slowdown windows. The default `FaultPlan.none()` disables every
     # hook — the engine's schedule is bit-identical to the fault-free code.
     faults: FaultPlan = field(default_factory=FaultPlan)
+    # ---- device placement (resources.GPUPool) ----------------------------
+    # "jax" binds every pool slot to a concrete jax.Device and fused grant
+    # math runs on the granted slot's device (launch.host_mesh forces N
+    # host devices on CPU); "modeled" (default) binds nothing and is
+    # bit-identical to the placement-free engine.
+    device_backend: str = "modeled"
+    # per-client phase offsets for fleet-wide FaultPlan rate traces: each
+    # client's cyclic bandwidth replay starts at a deterministic
+    # client-id-hashed point in the trace period, so fleet-wide fades
+    # decorrelate instead of synchronizing every uplink. False (default)
+    # replays every link in phase — bit-identical to PR 9.
+    trace_phase_per_client: bool = False
 
 
 @dataclass
@@ -191,7 +203,8 @@ class ServingEngine:
             n_gpus=self.cfg.n_gpus, cost=self.cost,
             migration=self.cfg.migration,
             residency_cap=self.cfg.residency_cap,
-            streams=self.cfg.streams)
+            streams=self.cfg.streams,
+            device_backend=self.cfg.device_backend)
         self.q = EventQueue()
         self._queue: list[_Backlog] = []
         self._active: set[int] = set()  # clients mid-phase on some device
@@ -234,11 +247,19 @@ class ServingEngine:
         self._last_delta_arrival: dict[int, float] = {}  # staleness telemetry
         if self._chaos:
             plan = self.cfg.faults
+            # trace_phase_per_client decorrelates the fleet-wide replay:
+            # each client's link starts at a deterministic id-hashed point
+            # of the cyclic trace (network.RateTrace.for_client); off
+            # (default) every link replays in phase, bit-identical to the
+            # unphased engine (for_client(0-offset) is `is`-same object)
+            phased = self.cfg.trace_phase_per_client
             for s in self.sessions:
                 if plan.up_rate_trace is not None:
-                    s.net.up.trace = plan.up_rate_trace
+                    s.net.up.trace = (plan.up_rate_trace.for_client(s.idx)
+                                      if phased else plan.up_rate_trace)
                 if plan.down_rate_trace is not None:
-                    s.net.down.trace = plan.down_rate_trace
+                    s.net.down.trace = (plan.down_rate_trace.for_client(s.idx)
+                                        if phased else plan.down_rate_trace)
         # flight recorder (serving.obs.Tracer). None = tracing off: every
         # emission site is behind an `is not None` check, so the disabled
         # engine does no extra work and its schedule is bit-identical
@@ -247,8 +268,11 @@ class ServingEngine:
             tracer.setup_engine(self.pool, self.sessions, self.cfg)
             self.pool.tracer = tracer
             for s in self.sessions:
-                s.net.tracer = tracer
-                s.net.client = s.idx
+                # a sample_clients subset leaves unsampled links untraced —
+                # their transfers take the no-tracer fast path, zero spans
+                if tracer.traces_client(s.idx):
+                    s.net.tracer = tracer
+                    s.net.client = s.idx
         self._grant_spans: dict = {}  # gid -> open device-grant span
         self._grant_seq = 0  # stable grant ids (span nesting + flows)
         # telemetry: every counter lives in the registry, and the results
@@ -1051,8 +1075,11 @@ class ServingEngine:
         if len(clients) == 1:
             deltas = [self.sessions[ev.client].train(ev.time)]
         else:
-            # the stacked launch just finished: run the actual fused math
-            deltas = train_many([self.sessions[c] for c in clients], ev.time)
+            # the stacked launch just finished: run the actual fused math —
+            # on the granted pool slot's own jax device when the pool binds
+            # one (device_backend="jax"); None places nothing (bit-identical)
+            deltas = train_many([self.sessions[c] for c in clients], ev.time,
+                                device=self.pool.device(gid).jax_device)
         self.served.inc(len(clients))
         legacy = self.cfg.streams.legacy
         cost = self.pool.device(gid).cost
@@ -1206,7 +1233,7 @@ class ServingEngine:
             # a fresher delta exists (shipped or shipping): drop this one
             self.chaos_deltas_superseded.inc()
             self.chaos_superseded_bytes.inc(delta.total_bytes)
-            if self.tracer is not None:
+            if self.tracer is not None and self.tracer.traces_client(c):
                 self.tracer.instant(self.tracer.client_pid(c), TID_DOWN,
                                     "supersede", ev.time,
                                     {"bytes": int(delta.total_bytes)})

@@ -20,16 +20,36 @@ from dataclasses import dataclass, field
 
 from repro.core.bandwidth import BandwidthLedger
 
+_M64 = (1 << 64) - 1
+
+
+def _mix64(x: int) -> int:
+    """splitmix64 finalizer (`serving.faults` has the same one; a local
+    copy because faults imports this module)."""
+    x = (x + 0x9E3779B97F4A7C15) & _M64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _M64
+    return x ^ (x >> 31)
+
 
 @dataclass(frozen=True)
 class RateTrace:
     """A cyclic variable-bandwidth replay: ``kbps[i]`` holds for the i-th
     ``interval_s`` slice of wall-clock, repeating past the end. Zero-rate
     slices model dead air (a burst gap), so at least one slice must be
-    positive or no transfer could ever finish."""
+    positive or no transfer could ever finish.
+
+    ``phase_s`` shifts where in the cycle the replay starts: the link sees
+    ``rate_at(t + phase_s)``. A fleet replaying ONE trace in phase fades
+    and recovers in lock-step — every uplink stalls together, which is a
+    different (and rarer) regime than a fleet of independently-faded
+    links. `for_client` derives a deterministic per-client phase from the
+    client id, decorrelating the fleet while staying fully reproducible;
+    the default 0.0 is bit-identical to the unphased trace."""
 
     kbps: tuple[float, ...]
     interval_s: float = 1.0
+    phase_s: float = 0.0
 
     def __post_init__(self):
         object.__setattr__(self, "kbps",
@@ -43,13 +63,39 @@ class RateTrace:
                              "or transfers never finish")
         if self.interval_s <= 0.0:
             raise ValueError("RateTrace interval_s must be > 0")
+        if self.phase_s < 0.0:
+            raise ValueError("RateTrace phase_s must be >= 0 (it is an "
+                             "offset into a cyclic trace; wrap negatives "
+                             "by adding the period)")
 
     @property
     def mean_kbps(self) -> float:
         return sum(self.kbps) / len(self.kbps)
 
+    @property
+    def period_s(self) -> float:
+        return len(self.kbps) * self.interval_s
+
+    def with_phase(self, phase_s: float) -> "RateTrace":
+        """This trace shifted to start ``phase_s`` into its cycle (wrapped
+        to the period). Returns ``self`` unchanged for a 0 offset, so the
+        unphased path keeps object identity (and bit-identity)."""
+        phase_s = float(phase_s) % self.period_s
+        if phase_s == self.phase_s:
+            return self
+        return RateTrace(self.kbps, self.interval_s, phase_s)
+
+    def for_client(self, client: int) -> "RateTrace":
+        """A deterministically client-phased copy: the offset is a
+        splitmix64 hash of the client id mapped onto the trace period —
+        stable across runs and processes, no RNG consumed. Client fades
+        then decorrelate across the fleet instead of synchronizing."""
+        frac = (_mix64(int(client) & _M64) >> 11) / float(1 << 53)
+        return self.with_phase(self.phase_s + frac * self.period_s)
+
     def rate_at(self, t: float) -> float:
         """Instantaneous rate (kbps) at absolute time ``t``, cyclic."""
+        t = t + self.phase_s
         return self.kbps[int(t // self.interval_s) % len(self.kbps)]
 
     def finish_time(self, start: float, nbits: float) -> float:
@@ -58,6 +104,7 @@ class RateTrace:
         if nbits <= 0.0:
             return start
         n, iv = len(self.kbps), self.interval_s
+        start = start + self.phase_s  # walk in trace time, return wall time
         idx = int(start // iv)
         t, remaining = start, float(nbits)
         while True:
@@ -65,7 +112,7 @@ class RateTrace:
             seg_end = (idx + 1) * iv
             cap = rate_bps * (seg_end - t)
             if rate_bps > 0.0 and remaining <= cap:
-                return t + remaining / rate_bps
+                return t + remaining / rate_bps - self.phase_s
             remaining -= cap
             t = seg_end
             idx += 1
@@ -84,27 +131,37 @@ class LinkSpec:
     down_trace: RateTrace | None = None
 
     @classmethod
-    def from_trace(cls, path_or_dict, *, prop_delay_s: float | None = None
-                   ) -> "LinkSpec":
+    def from_trace(cls, path_or_dict, *, prop_delay_s: float | None = None,
+                   client: int | None = None) -> "LinkSpec":
         """Build a spec from a JSON trace fixture (path or parsed dict):
         ``{"interval_s": 1.0, "up_kbps": [...], "down_kbps": [...]}``.
         A direction without samples keeps the constant default; scalar
         rates are set to each trace's mean so rate-only consumers (cost
-        models, back-of-envelope sizing) see the right average."""
+        models, back-of-envelope sizing) see the right average.
+
+        ``client`` phase-shifts both traces deterministically from the
+        client id (`RateTrace.for_client`), so a fleet built from one
+        fixture fades out of lock-step; None (the default) keeps the
+        fixture's own phase — bit-identical to the pre-phasing loader."""
         if isinstance(path_or_dict, dict):
             data = path_or_dict
         else:
             with open(path_or_dict) as f:
                 data = json.load(f)
         iv = float(data.get("interval_s", 1.0))
+        phase = float(data.get("phase_s", 0.0))
         kw: dict = {}
         up = data.get("up_kbps")
         if up:
-            kw["up_trace"] = RateTrace(tuple(up), iv)
+            kw["up_trace"] = RateTrace(tuple(up), iv, phase)
+            if client is not None:
+                kw["up_trace"] = kw["up_trace"].for_client(client)
             kw["up_kbps"] = kw["up_trace"].mean_kbps
         down = data.get("down_kbps")
         if down:
-            kw["down_trace"] = RateTrace(tuple(down), iv)
+            kw["down_trace"] = RateTrace(tuple(down), iv, phase)
+            if client is not None:
+                kw["down_trace"] = kw["down_trace"].for_client(client)
             kw["down_kbps"] = kw["down_trace"].mean_kbps
         delay = (prop_delay_s if prop_delay_s is not None
                  else data.get("prop_delay_s"))

@@ -72,11 +72,23 @@ class Span:
 class Tracer:
     """Deterministic Chrome-trace recorder for one engine run."""
 
-    def __init__(self, max_clients: int = 1000):
+    def __init__(self, max_clients: int = 1000,
+                 sample_clients: int | None = None):
         # per-client span volume scales linearly with the fleet: tracing a
         # 10⁵-client fleet would emit a multi-GB, unopenable trace, so the
-        # recorder refuses past this cap (raise it explicitly to insist)
+        # recorder refuses past this cap (raise it explicitly to insist).
+        # sample_clients instead traces a deterministic evenly-spaced
+        # subset of that size when the fleet exceeds the cap: server/GPU
+        # tracks stay complete, per-client transfer tracks exist only for
+        # the sampled clients (the schedule itself is untouched — sampling
+        # drops spans, never events)
+        if sample_clients is not None and sample_clients < 1:
+            raise ValueError(
+                f"sample_clients must be >= 1 (or None to refuse big "
+                f"fleets), got {sample_clients}")
         self.max_clients = max_clients
+        self.sample_clients = sample_clients
+        self._sampled: frozenset | None = None  # None = trace every client
         self._spans: list[Span] = []
         self._counters: list = []   # (seq, t, pid, name, values)
         self._instants: list = []   # (seq, t, pid, tid, name, args)
@@ -102,13 +114,24 @@ class Tracer:
     def setup_engine(self, pool, sessions, cfg) -> None:
         """Register the run's processes/threads and the trace metadata the
         schema validator reads (stream mode, pool/fleet size)."""
-        if len(sessions) > self.max_clients:
-            raise ValueError(
-                f"refusing to trace {len(sessions)} clients (cap "
-                f"{self.max_clients}): per-client transfer spans would make "
-                f"the trace unopenably large. Trace a small fleet (the "
-                f"schedule is deterministic, so a subsample reproduces), or "
-                f"pass Tracer(max_clients=...) to insist.")
+        n_fleet = len(sessions)
+        if n_fleet > self.max_clients:
+            if self.sample_clients is None:
+                raise ValueError(
+                    f"refusing to trace {n_fleet} clients (cap "
+                    f"{self.max_clients}): per-client transfer spans would "
+                    f"make the trace unopenably large. Trace a small fleet "
+                    f"(the schedule is deterministic, so a subsample "
+                    f"reproduces), pass Tracer(sample_clients=k) for a "
+                    f"deterministic k-client subset, or "
+                    f"Tracer(max_clients=...) to insist on everything.")
+            # deterministic, stable, evenly spaced over the sorted client
+            # ids: the same fleet always samples the same clients, and the
+            # subset spans the id range (ids often encode admission order)
+            ids = sorted(s.idx for s in sessions)
+            k = min(self.sample_clients, n_fleet)
+            self._sampled = frozenset(ids[(j * n_fleet) // k]
+                                      for j in range(k))
         self.meta = {
             "n_gpus": pool.n,
             "n_clients": len(sessions),
@@ -131,13 +154,22 @@ class Tracer:
             self.thread(pid, TID_GRANT, "grants")
             if chaos:
                 self.thread(pid, TID_FAULT, "faults")
+        if self._sampled is not None:
+            self.meta["sampled_clients"] = len(self._sampled)
         for s in sessions:
+            if not self.traces_client(s.idx):
+                continue
             pid = self.client_pid(s.idx)
             self.process(pid, f"client{s.idx}")
             self.thread(pid, TID_UP, "uplink")
             self.thread(pid, TID_DOWN, "downlink")
             if chaos:
                 self.thread(pid, TID_CLIENT_FAULT, "faults")
+
+    def traces_client(self, client: int) -> bool:
+        """Whether per-client spans for ``client`` are recorded (always
+        True unless a ``sample_clients`` subset is active)."""
+        return self._sampled is None or client in self._sampled
 
     def gpu_pid(self, gid: int) -> int:
         return GPU_PID_BASE + gid
@@ -167,7 +199,9 @@ class Tracer:
 
     def client_span(self, client: int, direction: str, name: str,
                     start: float, end: float,
-                    args: dict | None = None) -> Span:
+                    args: dict | None = None) -> Span | None:
+        if not self.traces_client(client):
+            return None  # unsampled client: schedule unchanged, span dropped
         tid = TID_UP if direction == "up" else TID_DOWN
         return self.span(self.client_pid(client), tid, name, start, end,
                          cat=f"net:{direction}", args=args)
@@ -179,8 +213,10 @@ class Tracer:
                          cat="fault", args=args)
 
     def client_fault_span(self, client: int, name: str, start: float,
-                          end: float, args: dict | None = None) -> Span:
+                          end: float, args: dict | None = None) -> Span | None:
         """A link-outage window on a client's fault track (chaos runs)."""
+        if not self.traces_client(client):
+            return None
         return self.span(self.client_pid(client), TID_CLIENT_FAULT, name,
                          start, end, cat="fault", args=args)
 
@@ -535,6 +571,29 @@ def _modeled_stage_s(cost, stage: str, key: tuple, nbytes: int,
         return cost.delta_comp_s(nbytes) * blend
     if stage == "encode_solo":
         return cost.delta_comp_s(nbytes)
+    if stage == "sharded_device":
+        # one pool slot's lifecycle in a sharded batch
+        # (core.batched.train_phases_sharded): the measured window runs
+        # from batch start to this device's own train completion, so the
+        # price is the stacked selection share plus the fused train launch
+        _slot, b, k = key
+        return calls * (cost.update_setup_s
+                        + cost.select_s * (1 + cost.update_discount
+                                           * (b - 1))
+                        + cost.train_batch_s(b, k))
+    if stage == "train_sharded":
+        # whole-batch parallel wall-clock: D uniform lifecycles running
+        # concurrently are priced at ONE lifecycle — that the measured
+        # ratio approaches this only with real distinct devices is the
+        # point of the audit. Non-uniform batches (no (D, B, K) key) are
+        # covered by their per-device stages instead.
+        if len(key) != 3:
+            return None
+        _d, b, k = key
+        return calls * (cost.update_setup_s
+                        + cost.select_s * (1 + cost.update_discount
+                                           * (b - 1))
+                        + cost.train_batch_s(b, k))
     return None
 
 
@@ -547,7 +606,13 @@ def drift_report(cost, stats: dict | None = None) -> dict:
     prices execution, not compilation). ``drift_ratio`` > 1 means the real
     math is slower than modeled; None means the model prices the stage at
     zero (itself a finding: the stage costs real time the engine charges
-    nothing for)."""
+    nothing for).
+
+    Sharded batches (`core.batched.train_phases_sharded`) additionally get
+    a *per-device* comparison: the ``sharded_device`` entry carries a
+    ``per_device`` dict keyed by pool slot, each with its own measured vs
+    modeled steady seconds and drift ratio — the audit that tells a real
+    4-device pool from four modeled clocks ticking over one device."""
     from repro.core import timing as _timing
 
     stats = _timing.snapshot() if stats is None else stats
@@ -565,14 +630,23 @@ def drift_report(cost, stats: dict | None = None) -> dict:
         e["steady_calls"] += steady
         e["compile_s"] += v["first_s"]
         e["measured_steady_s"] += v["steady_s"]
-        e["modeled_steady_s"] += (modeled * steady / v["calls"]
-                                  if v["calls"] else 0.0)
+        modeled_steady = (modeled * steady / v["calls"] if v["calls"] else 0.0)
+        e["modeled_steady_s"] += modeled_steady
         e["nbytes"] += v["nbytes"]
+        if stage == "sharded_device":
+            d = e.setdefault("per_device", {}).setdefault(int(key[0]), {
+                "calls": 0, "steady_calls": 0,
+                "measured_steady_s": 0.0, "modeled_steady_s": 0.0})
+            d["calls"] += v["calls"]
+            d["steady_calls"] += steady
+            d["measured_steady_s"] += v["steady_s"]
+            d["modeled_steady_s"] += modeled_steady
     for e in out.values():
-        meas, mod = e["measured_steady_s"], e["modeled_steady_s"]
-        e["drift_ratio"] = (meas / mod) if mod > 0 else None
-        e["measured_per_call_s"] = (meas / e["steady_calls"]
-                                    if e["steady_calls"] else 0.0)
+        for d in (*e.get("per_device", {}).values(), e):
+            meas, mod = d["measured_steady_s"], d["modeled_steady_s"]
+            d["drift_ratio"] = (meas / mod) if mod > 0 else None
+            d["measured_per_call_s"] = (meas / d["steady_calls"]
+                                        if d["steady_calls"] else 0.0)
     return out
 
 
@@ -597,6 +671,7 @@ def debug_snapshot() -> dict:
                             for (backend, base), mode
                             in batched.auto_mode_info().items()},
         "update_pipeline": batched.update_pipeline_info(),
+        "sharded": batched.sharded_info(),
         "stacked_select_cache": selection.stacked_cache_info(),
         "stacked_encode_cache": delta_codec.stack_cache_info(),
         "kernel_dispatch": kernel_dispatch.kernel_dispatch_info(),

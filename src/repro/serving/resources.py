@@ -192,6 +192,10 @@ class GPUDevice:
 
     gid: int
     cost: GPUCostModel = field(default_factory=GPUCostModel)
+    # concrete jax.Device this pool slot executes on (device_backend="jax");
+    # None under the default modeled backend — the math then runs wherever
+    # jax puts it (the default device) and only the *clocks* are per-device
+    jax_device: object = None
     busy: bool = False
     crashed: bool = False  # fault injection: dead devices take no grants
     busy_s: float = 0.0
@@ -242,14 +246,35 @@ class GPUPool:
                  costs: list[GPUCostModel] | None = None,
                  migration: MigrationModel | None = None,
                  residency_cap: int | None = None,
-                 streams: StreamModel | None = None):
+                 streams: StreamModel | None = None,
+                 device_backend: str = "modeled"):
         if residency_cap is not None and residency_cap < 1:
             raise ValueError(
                 f"residency_cap must be >= 1 (or None for unbounded HBM), "
                 f"got {residency_cap}")
+        if device_backend not in ("modeled", "jax"):
+            raise ValueError(
+                f"device_backend must be 'modeled' or 'jax', "
+                f"got {device_backend!r}")
         if costs is None:
             costs = [cost or GPUCostModel()] * max(n_gpus, 1)
         self.devices = [GPUDevice(gid=g, cost=c) for g, c in enumerate(costs)]
+        # device_backend="jax": bind every pool slot to a concrete
+        # jax.Device so fused lifecycles for co-resident groups on
+        # *different* slots really dispatch on different devices
+        # (launch.host_mesh forces N host devices on CPU-only hosts).
+        # Round-robin when the pool is wider than the live device list —
+        # the clocks stay per-slot either way, but `distinct_jax_devices`
+        # tells benchmarks how much real parallelism is available.
+        # "modeled" (the default) binds nothing and is bit-identical to
+        # the pre-knob pool: no jax import, no device_put, no placement.
+        self.device_backend = device_backend
+        if device_backend == "jax":
+            import jax
+
+            live = jax.devices()
+            for d in self.devices:
+                d.jax_device = live[d.gid % len(live)]
         self.migration = migration or MigrationModel()
         self.streams = streams or StreamModel()
         self.tracer = None  # flight recorder (serving.obs.Tracer), optional
@@ -276,6 +301,20 @@ class GPUPool:
 
     def device(self, gid: int) -> GPUDevice:
         return self.devices[gid]
+
+    def jax_devices(self) -> list:
+        """Per-slot jax.Device bindings (list of None under "modeled")."""
+        return [d.jax_device for d in self.devices]
+
+    @property
+    def distinct_jax_devices(self) -> int:
+        """How many *different* real devices back the pool (0 = modeled).
+
+        A 4-slot pool on a 1-device host binds 4 slots to the same device:
+        correctness holds but a "sharded" launch is physically serial, so
+        benchmarks gate their wall-clock claims on this being > 1."""
+        return len({id(d.jax_device) for d in self.devices
+                    if d.jax_device is not None})
 
     def free_ids(self) -> list[int]:
         return [d.gid for d in self.devices

@@ -276,14 +276,18 @@ class StubSession(SessionBase):
         return StubDelta(total_bytes=self._delta_bytes)
 
 
-def train_many(sessions: list, t: float) -> list:
+def train_many(sessions: list, t: float, device=None) -> list:
     """Train several co-granted sessions, fusing where the math allows.
 
     Sessions exposing a real AMS core (``ams_session``) run through
     `core.batched.train_phases_fused` as one stacked scan/vmap launch (same
     grouping rules: shared loss callable, shapes, K, optimizer). Everything
     else — stubs, single stragglers — falls back to its own ``train``. The
-    returned list is delta-or-None per session, in input order."""
+    returned list is delta-or-None per session, in input order.
+
+    ``device`` is the granted pool slot's ``jax.Device`` binding
+    (`GPUPool(device_backend="jax")`): the fused stacked launch then runs
+    on that device instead of the default one. None places nothing."""
     out: list = [None] * len(sessions)
     fusable = [i for i, s in enumerate(sessions)
                if getattr(s, "ams_session", None) is not None]
@@ -291,7 +295,8 @@ def train_many(sessions: list, t: float) -> list:
     if len(fusable) >= 2:
         from repro.core.batched import train_phases_fused
 
-        deltas = train_phases_fused([sessions[i].ams_session for i in fusable], t)
+        deltas = train_phases_fused([sessions[i].ams_session for i in fusable],
+                                    t, device=device)
         for i, d in zip(fusable, deltas):
             if d is not None:
                 sessions[i].phases += 1

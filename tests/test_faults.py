@@ -195,6 +195,69 @@ def test_linkspec_from_trace_fixture():
     assert spec2.up_trace == spec.up_trace
 
 
+def test_rate_trace_phase_offsets():
+    tr = RateTrace(kbps=(1000.0, 500.0), interval_s=1.0)
+    # 0-offset keeps object identity: the unphased path is bit-identical
+    assert tr.with_phase(0.0) is tr
+    assert tr.with_phase(tr.period_s) is tr  # wraps modulo the period
+    sh = tr.with_phase(1.0)
+    assert sh.rate_at(0.0) == 500.0 and sh.rate_at(1.0) == 1000.0
+    # finish_time walks in trace time but returns wall-clock time
+    assert sh.finish_time(0.0, 0.5e6) == pytest.approx(1.0)
+    assert sh.finish_time(1.0, 1.0e6) == pytest.approx(2.0)
+    with pytest.raises(ValueError):
+        RateTrace((1000.0,), 1.0, phase_s=-0.5)
+
+
+def test_rate_trace_for_client_decorrelates_deterministically():
+    tr = RateTrace(kbps=(1000.0, 0.0, 250.0, 800.0), interval_s=1.0)
+    assert tr.for_client(7) == tr.for_client(7)  # stable across calls
+    assert tr.for_client(7).kbps == tr.kbps  # samples untouched, only phase
+    phases = {tr.for_client(c).phase_s for c in range(16)}
+    assert all(0.0 <= p < tr.period_s for p in phases)
+    assert len(phases) >= 14, "client phases collide far too often"
+    # a phased replay conserves the cyclic integral: one full period of
+    # bits drains in exactly one period wherever the cycle starts (strictly
+    # positive rates — a start inside a zero slice legitimately finishes
+    # early, at the boundary where the cumulative integral already closes)
+    pos = RateTrace(kbps=(1000.0, 125.0, 250.0, 800.0), interval_s=1.0)
+    total_bits = sum(r * 1e3 * pos.interval_s for r in pos.kbps)
+    for c in (0, 3, 11):
+        assert pos.for_client(c).finish_time(0.0, total_bits) == \
+            pytest.approx(pos.period_s)
+
+
+def test_linkspec_from_trace_client_phasing():
+    raw = {"interval_s": 1.0, "up_kbps": [1000, 200],
+           "down_kbps": [800, 80]}
+    base = LinkSpec.from_trace(raw)
+    assert base.up_trace.phase_s == 0.0  # default: bit-identical loader
+    s7 = LinkSpec.from_trace(raw, client=7)
+    assert s7.up_trace == base.up_trace.for_client(7)
+    assert s7.down_trace == base.down_trace.for_client(7)
+    assert s7.up_kbps == pytest.approx(base.up_kbps)  # mean is phase-free
+    # a fixture's own phase_s is honored (and composes with the client's)
+    shifted = LinkSpec.from_trace({**raw, "phase_s": 0.25})
+    assert shifted.up_trace.phase_s == 0.25
+
+
+def test_engine_trace_phase_per_client_wireup():
+    tr = RateTrace(kbps=(900.0, 90.0), interval_s=1.0)
+    plan = FaultPlan(up_rate_trace=tr, down_rate_trace=tr)
+    cfg = dict(duration=1.0, max_queue=8, n_gpus=1, faults=plan)
+    eng = ServingEngine(_fleet(4), cfg=ServingConfig(**cfg))
+    # default: every link replays the SAME trace object (lock-step fleet)
+    assert all(s.net.up.trace is tr and s.net.down.trace is tr
+               for s in eng.sessions)
+    eng = ServingEngine(_fleet(4), cfg=ServingConfig(
+        **cfg, trace_phase_per_client=True))
+    ups = [s.net.up.trace for s in eng.sessions]
+    assert [u.phase_s for u in ups] == \
+        [tr.for_client(s.idx).phase_s for s in eng.sessions]
+    assert len({u.phase_s for u in ups}) == 4  # decorrelated
+    assert all(u.kbps == tr.kbps for u in ups)
+
+
 # ---------------- engine: fault-free identity ----------------
 
 

@@ -107,6 +107,55 @@ def test_trace_has_layout_and_counters():
     assert any(e.get("ph") == "f" for e in evs)
 
 
+# ---------------- client sampling past the fleet cap ----------------
+
+
+def test_tracer_refuses_big_fleets_and_points_at_sampling():
+    tracer = Tracer(max_clients=4)
+    try:
+        _run(6, tracer=tracer)
+    except ValueError as e:
+        assert "sample_clients=k" in str(e)
+    else:
+        raise AssertionError("expected the big-fleet refusal")
+    try:
+        Tracer(sample_clients=0)
+    except ValueError as e:
+        assert "sample_clients" in str(e)
+    else:
+        raise AssertionError("expected sample_clients >= 1 validation")
+
+
+def test_tracer_sampling_is_deterministic_and_evenly_spaced():
+    t1 = Tracer(max_clients=4, sample_clients=3)
+    t2 = Tracer(max_clients=4, sample_clients=3)
+    r1 = _run(9, tracer=t1)
+    r2 = _run(9, tracer=t2)
+    assert t1._sampled == t2._sampled  # same fleet -> same subset
+    assert t1._sampled == frozenset({0, 3, 6})  # ids[(j*n)//k], spans range
+    assert t1.meta["sampled_clients"] == 3
+    assert all(t1.traces_client(c) == (c in {0, 3, 6}) for c in range(9))
+    assert t1.client_span(1, "up", "x", 0.0, 1.0) is None  # span dropped
+    assert t1.to_json() == t2.to_json()
+    # sampling drops spans, never events: the schedule is untouched
+    assert _stable(r1) == _stable(r2)
+    assert _stable(r1) == _stable(_run(9))
+    # sampled-client tracks exist; unsampled ones don't
+    trace = json.loads(t1.to_json())
+    procs = {e["args"]["name"] for e in trace["traceEvents"]
+             if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert {"client0", "client3", "client6"} <= procs
+    assert not {f"client{i}" for i in (1, 2, 4, 5, 7, 8)} & procs
+
+
+def test_tracer_sampling_inactive_under_the_cap():
+    tracer = Tracer(sample_clients=3)  # default cap 1000 >> fleet
+    _run(6, tracer=tracer)
+    assert tracer._sampled is None  # every client traced
+    assert "sampled_clients" not in tracer.meta
+    assert all(tracer.traces_client(c) for c in range(6))
+
+
 # ---------------- trace invariants (property-style) ----------------
 
 
@@ -385,10 +434,13 @@ def test_serving_stage_report_ranks_bottleneck():
 def test_debug_snapshot_unifies_hooks():
     snap = debug_snapshot()
     assert set(snap) == {"fused_train_cache", "auto_exec_modes",
-                         "update_pipeline", "stacked_select_cache",
+                         "update_pipeline", "sharded",
+                         "stacked_select_cache",
                          "stacked_encode_cache", "kernel_dispatch",
                          "stage_timings"}
     assert {"size", "hits", "misses"} <= set(snap["fused_train_cache"])
+    assert {"batches", "groups", "sessions", "dispatch_launches",
+            "spmd_launches", "distinct_devices"} <= set(snap["sharded"])
     assert {"stacked_select_launches",
             "stacked_encode_launches"} <= set(snap["update_pipeline"])
     assert {"mode", "auto_races"} <= set(snap["kernel_dispatch"])
